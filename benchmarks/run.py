@@ -1,0 +1,232 @@
+"""Benchmark harness — one function per paper table/figure + substrate
+µbenches. Prints ``name,us_per_call,derived`` CSV rows and writes
+``results/bench_*.csv`` detail files.
+
+Paper figures (all on the Table-1 grid: 4 regions x 13 sites, 10 GB SEs,
+1000/10 Mbps LAN/WAN, 5 job types x 12 x 500 MB files):
+
+  fig4  average job time vs number of jobs   (HRS / BHR / LRU)
+  fig5  average job time at 1000 jobs
+  fig6  average inter-region communications per job
+  fig7  average job time vs WAN bandwidth (500 jobs)
+
+Beyond-paper: scheduler ablation (the paper's scheduler vs random /
+least-loaded / shortest-transfer), jit'd dispatch throughput, fault-
+tolerance run, kernel µbenches (interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+STRATS = ("hrs", "bhr", "lru")
+
+
+def _cfg(**kw):
+    from repro.core import GridConfig
+    return GridConfig(**kw)
+
+
+def _row(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def _write_csv(name: str, header: list[str], rows: list[list]) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, name), "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+
+
+def fig4_avg_job_time_vs_njobs() -> None:
+    from repro.core import run_experiment
+    rows = []
+    t0 = time.perf_counter()
+    for n in (100, 200, 300, 400, 500):
+        vals = {}
+        for s in STRATS:
+            r = run_experiment(_cfg(), strategy=s, n_jobs=n)
+            vals[s] = r.avg_job_time
+        rows.append([n] + [round(vals[s], 1) for s in STRATS])
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    _write_csv("bench_fig4.csv", ["n_jobs", *STRATS], rows)
+    last = rows[-1]
+    gain = 100.0 * (last[2] - last[1]) / last[2]
+    _row("fig4_avg_job_time", us, f"hrs_over_bhr_at_500={gain:.1f}%")
+
+
+def fig5_avg_job_time_1000() -> None:
+    from repro.core import run_experiment
+    t0 = time.perf_counter()
+    vals = {s: run_experiment(_cfg(n_jobs=1000), strategy=s, n_jobs=1000)
+            .avg_job_time for s in STRATS}
+    us = (time.perf_counter() - t0) * 1e6
+    _write_csv("bench_fig5.csv", ["strategy", "avg_job_time_s"],
+               [[s, round(vals[s], 1)] for s in STRATS])
+    gain = 100.0 * (vals["bhr"] - vals["hrs"]) / vals["bhr"]
+    _row("fig5_1000_jobs", us, f"hrs={vals['hrs']:.0f}s,"
+         f"bhr={vals['bhr']:.0f}s,lru={vals['lru']:.0f}s,gain={gain:.1f}%")
+
+
+def fig6_inter_communications() -> None:
+    from repro.core import run_experiment
+    t0 = time.perf_counter()
+    vals = {s: run_experiment(_cfg(), strategy=s, n_jobs=500)
+            .avg_inter_comms for s in STRATS}
+    us = (time.perf_counter() - t0) * 1e6
+    _write_csv("bench_fig6.csv", ["strategy", "avg_inter_comms"],
+               [[s, round(vals[s], 3)] for s in STRATS])
+    _row("fig6_inter_comms", us,
+         ";".join(f"{s}={vals[s]:.2f}" for s in STRATS))
+
+
+def fig7_wan_bandwidth_sweep() -> None:
+    from repro.core import run_experiment
+    rows = []
+    t0 = time.perf_counter()
+    for mbps in (10, 50, 100, 500, 1000):
+        vals = {}
+        for s in STRATS:
+            r = run_experiment(_cfg(wan_bandwidth=mbps * 1e6 / 8),
+                               strategy=s, n_jobs=500)
+            vals[s] = r.avg_job_time
+        rows.append([mbps] + [round(vals[s], 1) for s in STRATS])
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    _write_csv("bench_fig7.csv", ["wan_mbps", *STRATS], rows)
+    lo, hi = rows[0], rows[-1]
+    _row("fig7_wan_sweep", us,
+         f"gap@10Mbps={100*(lo[2]-lo[1])/lo[2]:.1f}%,"
+         f"gap@1000Mbps={100*(hi[2]-hi[1])/max(hi[2],1e-9):.1f}%")
+
+
+def scheduler_ablation() -> None:
+    """Beyond-paper: hold replication = HRS, vary the scheduler."""
+    from repro.core import run_experiment
+    scheds = ("dataaware", "random", "leastloaded", "shortesttransfer")
+    t0 = time.perf_counter()
+    vals = {s: run_experiment(_cfg(), scheduler=s, strategy="hrs",
+                              n_jobs=300).avg_job_time for s in scheds}
+    us = (time.perf_counter() - t0) * 1e6
+    _write_csv("bench_sched_ablation.csv", ["scheduler", "avg_job_time_s"],
+               [[s, round(vals[s], 1)] for s in scheds])
+    _row("scheduler_ablation", us,
+         ";".join(f"{s}={vals[s]:.0f}" for s in scheds))
+
+
+def eviction_phase_ablation() -> None:
+    """Isolate the paper's novel two-phase eviction: HRS vs HRS with plain
+    LRU eviction (everything else identical)."""
+    from repro.core import run_experiment
+    t0 = time.perf_counter()
+    full = run_experiment(_cfg(), strategy="hrs", n_jobs=500)
+    single = run_experiment(_cfg(), strategy="hrs_singlephase", n_jobs=500)
+    us = (time.perf_counter() - t0) * 1e6
+    gain = 100 * (single.avg_job_time - full.avg_job_time) / single.avg_job_time
+    _write_csv("bench_eviction_ablation.csv",
+               ["strategy", "avg_job_time_s", "avg_inter_comms"],
+               [["hrs_twophase", round(full.avg_job_time, 1),
+                 round(full.avg_inter_comms, 3)],
+                ["hrs_singlephase", round(single.avg_job_time, 1),
+                 round(single.avg_inter_comms, 3)]])
+    _row("eviction_phase_ablation", us,
+         f"two_phase={full.avg_job_time:.0f}s;single_phase="
+         f"{single.avg_job_time:.0f}s;two_phase_gain={gain:.1f}%;"
+         f"ic={full.avg_inter_comms:.2f}vs{single.avg_inter_comms:.2f}")
+
+
+def sched_throughput() -> None:
+    """jit'd dispatch decision latency (vectorized paper §3.2)."""
+    from repro.core import build_catalog, build_topology, generate_jobs
+    from repro.core.jaxsched import JaxScheduler
+    cfg = _cfg()
+    topo = build_topology(cfg)
+    cat = build_catalog(cfg, topo)
+    js = JaxScheduler(cat, topo)
+    jobs = generate_jobs(cfg, 64)
+    js.select(jobs[0].required)          # warm up
+    t0 = time.perf_counter()
+    reps = 20
+    for _ in range(reps):
+        js.select_batch([j.required for j in jobs])
+    us = (time.perf_counter() - t0) * 1e6 / (reps * len(jobs))
+    _row("jit_dispatch", us, f"us_per_decision={us:.1f}")
+
+
+def failover_recovery() -> None:
+    """Fault-tolerance: DES with failures + speculative backups."""
+    from repro.core import run_experiment
+    t0 = time.perf_counter()
+    base = run_experiment(_cfg(), strategy="hrs", n_jobs=200)
+    failures = [(5, 2000.0, 4000.0), (20, 6000.0, 5000.0)]
+    failed = run_experiment(_cfg(), strategy="hrs", n_jobs=200,
+                            failures=failures)
+    slow = run_experiment(_cfg(), strategy="hrs", n_jobs=200,
+                          slowdowns=[(7, 1000.0, 8000.0, 0.05)],
+                          speculative_backups=True)
+    us = (time.perf_counter() - t0) * 1e6
+    _row("failover_recovery", us,
+         f"base={base.avg_job_time:.0f}s;with_failures={failed.avg_job_time:.0f}s;"
+         f"stragglers+spec={slow.avg_job_time:.0f}s;"
+         f"all_jobs_completed={failed.n_jobs == 200}")
+
+
+def kernel_flash_attention() -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    q = jnp.ones((2, 8, 512, 64), jnp.bfloat16)
+    k = jnp.ones((2, 4, 512, 64), jnp.bfloat16)
+    v = jnp.ones((2, 4, 512, 64), jnp.bfloat16)
+    f = jax.jit(lambda a, b, c: flash_attention_ref(a, b, c, causal=True))
+    f(q, k, v).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        f(q, k, v).block_until_ready()
+    us = (time.perf_counter() - t0) * 1e6 / 5
+    flops = 2 * 2 * 8 * 512 * 512 * 64 * 2
+    _row("kernel_flash_ref_cpu", us, f"gflops_s={flops/us*1e6/1e9:.1f}")
+
+
+def kernel_selective_scan() -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.selective_scan.ref import selective_scan_ref
+    Bz, S, Di, N = 2, 512, 256, 16
+    x = jnp.ones((Bz, S, Di), jnp.float32)
+    dt = jnp.full((Bz, S, Di), 0.1, jnp.float32)
+    B = jnp.ones((Bz, S, N), jnp.float32)
+    C = jnp.ones((Bz, S, N), jnp.float32)
+    A = -jnp.ones((Di, N), jnp.float32)
+    D = jnp.ones((Di,), jnp.float32)
+    h0 = jnp.zeros((Bz, Di, N), jnp.float32)
+    f = jax.jit(lambda *a: selective_scan_ref(*a)[0])
+    f(x, dt, B, C, A, D, h0).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        f(x, dt, B, C, A, D, h0).block_until_ready()
+    us = (time.perf_counter() - t0) * 1e6 / 5
+    _row("kernel_scan_ref_cpu", us,
+         f"tokens_per_s={Bz*S/us*1e6:.0f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    fig4_avg_job_time_vs_njobs()
+    fig5_avg_job_time_1000()
+    fig6_inter_communications()
+    fig7_wan_bandwidth_sweep()
+    scheduler_ablation()
+    eviction_phase_ablation()
+    sched_throughput()
+    failover_recovery()
+    kernel_flash_attention()
+    kernel_selective_scan()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Serving example: batched greedy decoding with grid-routed request
+placement (prefix-KV locality via the paper's scheduler + HRS).
+
+  PYTHONPATH=src python examples/serve_grid.py
+"""
+
+import numpy as np
+import jax
+
+from repro.configs.base import get_config
+from repro.core import GridTopology
+from repro.grid.datagrid import DataGridService
+from repro.models import model as M
+from repro.serve.engine import GridRouter, Request, ServeEngine
+
+
+def main() -> None:
+    cfg = get_config("granite-3-8b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, max_len=64)
+
+    # a two-pod serving pool; three shared system prompts live as prefix-KV
+    # artifacts on different hosts
+    topo = GridTopology(2, 4, lan_bandwidth=50e9, wan_bandwidth=3.125e9,
+                        storage_capacity=64e9)
+    grid = DataGridService(topo)
+    router = GridRouter(grid, n_engines=topo.n_sites)
+    for i, site in enumerate((0, 3, 6)):
+        router.register_prefix(f"prefix{i}", kv_bytes=2e9, master_site=site)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32),
+                    max_new_tokens=8, prefix_id=f"prefix{i % 3}")
+            for i in range(12)]
+
+    print(f"{'req':>4} {'prefix':>8} {'site':>5} {'pod':>4}  completion")
+    for r in reqs:
+        site = router.route(r)
+        out = engine.generate(r.tokens[None, :], n_new=r.max_new_tokens)
+        router.complete(site, r)
+        print(f"{r.request_id:>4} {r.prefix_id:>8} {site:>5} "
+              f"{topo.region_of(site):>4}  {out[0].tolist()}")
+    print(f"\ninter-pod transfers: {grid.inter_comm_count()} "
+          f"(WAN {grid.wan_bytes()/1e9:.1f} GB) — prefix locality keeps "
+          f"requests in the pod that owns their KV block")
+
+
+if __name__ == "__main__":
+    main()

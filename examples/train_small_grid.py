@@ -1,0 +1,91 @@
+"""End-to-end driver: train a ~100M-param gemma3-family model for a few
+hundred steps with the full substrate — grid-placed data shards (HRS),
+checkpointing, and the fault-tolerant supervisor.
+
+  PYTHONPATH=src python examples/train_small_grid.py --steps 200
+"""
+
+import argparse
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core import GridTopology
+from repro.data.pipeline import (DataConfig, GridDataLoader,
+                                 SyntheticShardedDataset)
+from repro.fault.failures import FailurePlan, TrainingSupervisor
+from repro.grid.datagrid import DataGridService
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import (TrainConfig, init_train_state,
+                                    make_train_step)
+
+
+def make_100m_config():
+    """gemma3 family at ~100M params (12 layers, d=640, vocab 32k)."""
+    cfg = get_config("gemma3-1b")
+    return dataclasses.replace(
+        cfg, n_layers=12, d_model=640, n_heads=8, n_kv_heads=2, d_ff=2560,
+        head_dim=80, vocab=32000, local_window=256,
+        layer_pattern=("attn_local",) * 5 + ("attn",))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a node failure at this step")
+    args = ap.parse_args()
+
+    cfg = make_100m_config()
+    from repro.models.model import count_params_analytic
+    print(f"model: {cfg.name}-100m ~{count_params_analytic(cfg)/1e6:.0f}M params")
+
+    topo = GridTopology(2, 4, lan_bandwidth=50e9, wan_bandwidth=3.125e9,
+                        storage_capacity=256e9)
+    grid = DataGridService(topo, strategy="hrs", scheduler="dataaware")
+    ds = SyntheticShardedDataset(DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+        n_shards=32))
+    loader = GridDataLoader(ds, grid)
+
+    tcfg = TrainConfig(
+        n_microbatches=2,
+        opt=OptimizerConfig(peak_lr=3e-4, warmup_steps=20,
+                            total_steps=args.steps))
+    params, opt = init_train_state(cfg, jax.random.PRNGKey(0))
+    jstep = jax.jit(make_train_step(cfg, tcfg))
+
+    def step_fn(state, i):
+        p, o = state
+        batch, place = loader.next_batch()
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        p, o, m = jstep(p, o, batch)
+        return (p, o), {"loss": m["loss"], "grad_norm": m["grad_norm"],
+                        "lr": m["lr"]}
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="grid_train_")
+    plan = FailurePlan(fail_at_steps=(args.fail_at,) if args.fail_at else ())
+    sup = TrainingSupervisor(step_fn, ckpt_dir, ckpt_every=25, plan=plan)
+    state, hist = sup.run((params, opt), args.steps)
+
+    for h in hist[:: max(1, len(hist) // 10)]:
+        print(f"step {h['step']:4d}  loss {h['loss']:.4f}  "
+              f"gnorm {h['grad_norm']:.2f}  lr {h['lr']:.2e}")
+    print(f"\nfinal loss: {hist[-1]['loss']:.4f} (first {hist[0]['loss']:.4f})")
+    print(f"restarts: {sup.stats.restarts}, wasted steps: "
+          f"{sup.stats.steps_wasted}")
+    print(f"grid: {len(grid.transfers)} transfers, "
+          f"{grid.inter_comm_count()} inter-pod, "
+          f"WAN {grid.wan_bytes()/1e9:.1f} GB / LAN {grid.lan_bytes()/1e9:.1f} GB")
+    print(f"checkpoints in {ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+import json
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch.roofline import build_table, fmt_table
+
+rows = build_table("results/dryrun_v3", "single")
+print(fmt_table(rows))
+with open("results/roofline_final.json", "w") as f:
+    json.dump(rows, f, indent=1)
+
+base = {(r["arch"], r["shape"]): r
+        for r in json.load(open("results/roofline_baseline.json"))}
+print("\n=== dominant-term: baseline -> final (single-pod) ===")
+print(f"{'cell':38s} {'dom':>10s} {'base_s':>9s} {'final_s':>9s} {'x':>6s} "
+      f"{'useful%':>8s} {'roofl%':>7s}")
+for r in rows:
+    b = base.get((r["arch"], r["shape"]))
+    if b is None:
+        continue
+    dom = r["dominant"]
+    bs = max(b["compute_s"], b["memory_s"], b["collective_s"])
+    fs = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    x = bs / fs if fs else float("inf")
+    print(f"{r['arch'] + ' ' + r['shape']:38s} {dom:>10s} {bs:9.3f} "
+          f"{fs:9.3f} {x:6.2f} {100*r['useful_ratio']:8.1f} "
+          f"{100*r['roofline_fraction']:7.1f}")
+
+# multi-pod fits summary
+rows_m = build_table("results/dryrun_v3", "multi")
+with open("results/roofline_final_multi.json", "w") as f:
+    json.dump(rows_m, f, indent=1)
+over = [(r["arch"], r["shape"], round(r["peak_gb"], 1))
+        for r in rows_m if not r["fits_hbm"]]
+fit = sum(1 for r in rows_m if r["fits_hbm"])
+print(f"\nmulti-pod (512 chips): {fit}/{len(rows_m)} cells fit 16GB; over:")
+for a, s, p in over:
+    print(f"  {a:24s} {s:12s} {p} GB")

@@ -1,0 +1,4 @@
+"""repro — hierarchical data-grid scheduling + HRS replication (Abdi et
+al., 2010) built as a multi-pod JAX training/inference framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,29 @@
+"""whisper-large-v3 [audio] — enc-dec, 32L each side, d1280 20H (MHA kv=20)
+d_ff 5120 vocab 51866; conv frontend is a STUB (input_specs provides frame
+embeddings). [arXiv:2212.04356]
+
+Shape convention (DESIGN.md §5): seq_len = encoder frames; decoder length =
+seq_len // 8. Enc-dec (quadratic encoder) => long_500k skipped.
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-large-v3",
+    family="audio",
+    n_layers=32,                       # decoder layers
+    n_encoder_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab=51866,
+    head_dim=64,
+    enc_dec=True,
+    audio_frontend=True,
+    norm="layernorm",
+    act="gelu",
+    layer_pattern=("attn",),
+    tie_embeddings=True,
+    source="arXiv:2212.04356; unverified",
+)

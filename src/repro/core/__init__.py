@@ -1,0 +1,30 @@
+"""The paper's primary contribution: hierarchical data-grid scheduling +
+HRS replication, plus the discrete-event engine that evaluates them and the
+jit-compiled dispatch path used by the training/serving runtime."""
+
+from .catalog import FileInfo, ReplicaCatalog
+from .metrics import ExperimentResult, run_experiment
+from .replica import (BHRStrategy, FetchPlan, HRSSinglePhaseStrategy,
+                      HRSStrategy, LRUStrategy, NoReplicationStrategy,
+                      ReplicaStrategy, StorageState, STRATEGIES,
+                      make_strategy)
+from .scheduler import (DataAwareScheduler, Job, LeastLoadedScheduler,
+                        RandomScheduler, SchedulerPolicy, SCHEDULERS,
+                        ShortestTransferScheduler, make_scheduler)
+from .simulator import GridSimulator, JobRecord, SimResult
+from .topology import GridTopology, Link, Region, Site
+from .workload import (GB, MB, GridConfig, build_catalog, build_topology,
+                       generate_jobs, job_type_filesets)
+
+__all__ = [
+    "FileInfo", "ReplicaCatalog", "ExperimentResult", "run_experiment",
+    "BHRStrategy", "FetchPlan", "HRSSinglePhaseStrategy", "HRSStrategy",
+    "LRUStrategy",
+    "NoReplicationStrategy", "ReplicaStrategy", "StorageState", "STRATEGIES",
+    "make_strategy", "DataAwareScheduler", "Job", "LeastLoadedScheduler",
+    "RandomScheduler", "SchedulerPolicy", "SCHEDULERS",
+    "ShortestTransferScheduler", "make_scheduler", "GridSimulator",
+    "JobRecord", "SimResult", "GridTopology", "Link", "Region", "Site",
+    "GB", "MB", "GridConfig", "build_catalog", "build_topology",
+    "generate_jobs", "job_type_filesets",
+]

@@ -1,0 +1,73 @@
+"""Centralized Replica Catalogue (paper §3.1, Fig. 2).
+
+Indexes which sites hold which files; handles queries from the scheduler and
+the per-site replica managers. Master copies are pinned (the paper assumes
+"master site always has a safe copy before deleting").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class FileInfo:
+    lfn: str                 # logical file name
+    size: float              # bytes
+    master_site: int         # site holding the pinned master copy
+
+
+class ReplicaCatalog:
+    def __init__(self) -> None:
+        self.files: dict[str, FileInfo] = {}
+        self._holders: dict[str, set[int]] = {}
+
+    # -- registration (paper: "replica manager sends file register request
+    #    to RC and RC adds this site to the list of sites") ----------------
+    def register_file(self, lfn: str, size: float, master_site: int) -> None:
+        if lfn in self.files:
+            raise ValueError(f"duplicate file registration: {lfn}")
+        self.files[lfn] = FileInfo(lfn, size, master_site)
+        self._holders[lfn] = {master_site}
+
+    def add_replica(self, lfn: str, site_id: int) -> None:
+        self._holders[lfn].add(site_id)
+
+    def remove_replica(self, lfn: str, site_id: int) -> None:
+        info = self.files[lfn]
+        if site_id == info.master_site:
+            raise ValueError(f"cannot delete master copy of {lfn}")
+        self._holders[lfn].discard(site_id)
+
+    # -- queries -----------------------------------------------------------
+    def holders(self, lfn: str) -> set[int]:
+        return set(self._holders[lfn])
+
+    def has_replica(self, lfn: str, site_id: int) -> bool:
+        return site_id in self._holders[lfn]
+
+    def size(self, lfn: str) -> float:
+        return self.files[lfn].size
+
+    def n_copies(self, lfn: str) -> int:
+        return len(self._holders[lfn])
+
+    def is_master(self, lfn: str, site_id: int) -> bool:
+        return self.files[lfn].master_site == site_id
+
+    def files_at(self, site_id: int) -> list[str]:
+        return [lfn for lfn, h in self._holders.items() if site_id in h]
+
+    def bytes_at_site(self, required: list[str], site_id: int) -> float:
+        """Paper eq. (1): S_s = sum of sizes of required files present at s."""
+        return sum(
+            self.files[lfn].size for lfn in required if site_id in self._holders[lfn]
+        )
+
+    def duplicated_in_region(self, lfn: str, site_id: int, topology) -> bool:
+        """True if some *other* site in site_id's region also holds lfn."""
+        region = topology.region_of(site_id)
+        return any(
+            h != site_id and topology.region_of(h) == region
+            for h in self._holders[lfn]
+        )

@@ -1,0 +1,53 @@
+"""Aggregate metrics + the paper's experiment driver."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .simulator import GridSimulator, SimResult
+from .workload import GridConfig, build_catalog, build_topology, generate_jobs
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    scheduler: str
+    strategy: str
+    n_jobs: int
+    avg_job_time: float
+    avg_inter_comms: float
+    total_wan_gb: float
+    total_lan_gb: float
+    makespan: float
+
+
+def run_experiment(
+    cfg: GridConfig,
+    *,
+    scheduler: str = "dataaware",
+    strategy: str = "hrs",
+    n_jobs: int | None = None,
+    failures: list[tuple[int, float, float]] | None = None,
+    slowdowns: list[tuple[int, float, float, float]] | None = None,
+    speculative_backups: bool = False,
+) -> ExperimentResult:
+    """One full simulation run (the unit behind every paper figure)."""
+    topology = build_topology(cfg)
+    catalog = build_catalog(cfg, topology)
+    sim = GridSimulator(topology, catalog, scheduler=scheduler, strategy=strategy,
+                        seed=cfg.seed, speculative_backups=speculative_backups)
+    for info in catalog.files.values():
+        sim.storage.bootstrap(info.master_site, info.lfn)
+    jobs = generate_jobs(cfg, n_jobs)
+    for j, job in enumerate(jobs):
+        sim.submit_job(job, at=j * cfg.interarrival)
+    for site, at, dur in failures or []:
+        sim.inject_failure(site, at, dur)
+    for site, at, dur, factor in slowdowns or []:
+        sim.inject_slowdown(site, at, dur, factor)
+    res = sim.run()
+    return ExperimentResult(
+        scheduler=scheduler, strategy=strategy, n_jobs=len(jobs),
+        avg_job_time=res.avg_job_time, avg_inter_comms=res.avg_inter_comms,
+        total_wan_gb=res.total_wan_bytes / 1e9, total_lan_gb=res.total_lan_bytes / 1e9,
+        makespan=res.makespan,
+    )

@@ -1,0 +1,298 @@
+"""Replica management strategies: HRS (paper §3.3), BHR, LRU baselines.
+
+A strategy answers one question: *given that site ``dst`` needs file ``lfn``
+which it does not hold, where do we fetch it from and what happens to local
+storage?* The simulator (or the real runtime's DataGridService) executes the
+returned plan.
+
+Storage bookkeeping (LRU clocks, pinning of in-use files) lives in
+``StorageState`` so strategies stay pure decision functions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .catalog import ReplicaCatalog
+from .topology import GridTopology
+
+
+@dataclasses.dataclass
+class FetchPlan:
+    lfn: str
+    src: int
+    dst: int
+    store: bool                    # keep in dst's SE (vs temporary buffer)
+    evictions: list[str]           # lfns to delete from dst's SE first
+    inter_region: bool             # paper's "inter-communication" metric
+    remote_access: bool = False    # BHR: stream without storing
+
+
+class StorageState:
+    """Per-site SE contents with LRU clocks and pins."""
+
+    def __init__(self, catalog: ReplicaCatalog, topology: GridTopology) -> None:
+        self.catalog = catalog
+        self.topology = topology
+        # site -> {lfn: last_access_time}; insertion kept, times updated
+        self._contents: dict[int, dict[str, float]] = {
+            s.site_id: {} for s in topology.sites
+        }
+        self._pins: dict[int, dict[str, int]] = {s.site_id: {} for s in topology.sites}
+
+    # -- mutation ----------------------------------------------------------
+    def add(self, site: int, lfn: str, now: float) -> None:
+        size = self.catalog.size(lfn)
+        st = self.topology.sites[site]
+        assert st.free_storage >= size - 1e-9, (
+            f"SE overflow at site {site}: need {size}, free {st.free_storage}"
+        )
+        self._contents[site][lfn] = now
+        st.used_storage += size
+        self.catalog.add_replica(lfn, site)
+
+    def bootstrap(self, site: int, lfn: str, now: float = 0.0) -> None:
+        """Place an initial (master) copy that is already registered in the
+        catalog — fills SE bookkeeping without re-registering."""
+        self._contents[site][lfn] = now
+        self.topology.sites[site].used_storage += self.catalog.size(lfn)
+
+    def remove(self, site: int, lfn: str) -> None:
+        assert not self.is_pinned(site, lfn), f"evicting pinned {lfn}@{site}"
+        del self._contents[site][lfn]
+        self.topology.sites[site].used_storage -= self.catalog.size(lfn)
+        self.catalog.remove_replica(lfn, site)
+
+    def touch(self, site: int, lfn: str, now: float) -> None:
+        if lfn in self._contents[site]:
+            self._contents[site][lfn] = now
+
+    def pin(self, site: int, lfn: str) -> None:
+        self._pins[site][lfn] = self._pins[site].get(lfn, 0) + 1
+
+    def unpin(self, site: int, lfn: str) -> None:
+        n = self._pins[site].get(lfn, 0) - 1
+        if n <= 0:
+            self._pins[site].pop(lfn, None)
+        else:
+            self._pins[site][lfn] = n
+
+    def is_pinned(self, site: int, lfn: str) -> bool:
+        return self._pins[site].get(lfn, 0) > 0
+
+    # -- queries -----------------------------------------------------------
+    def holds(self, site: int, lfn: str) -> bool:
+        return lfn in self._contents[site]
+
+    def lru_order(self, site: int) -> list[str]:
+        """Site contents, least-recently-used first."""
+        return sorted(self._contents[site], key=lambda f: self._contents[site][f])
+
+    def evictable(self, site: int, lfn: str) -> bool:
+        """Masters and pinned (in-use) files are never evicted."""
+        return not self.catalog.is_master(lfn, site) and not self.is_pinned(site, lfn)
+
+    def free(self, site: int) -> float:
+        return self.topology.sites[site].free_storage
+
+
+def _best_bandwidth_source(
+    candidates: list[int], dst: int, topology: GridTopology
+) -> int:
+    """Max available-bandwidth source (HRS's replica-selection criterion)."""
+    return max(candidates, key=lambda s: (topology.point_bandwidth(s, dst), -s))
+
+
+class ReplicaStrategy:
+    """Base interface. Subclasses implement ``plan_fetch``."""
+
+    name = "base"
+
+    def __init__(self, catalog: ReplicaCatalog, topology: GridTopology,
+                 storage: StorageState) -> None:
+        self.catalog = catalog
+        self.topology = topology
+        self.storage = storage
+
+    def _online_holders(self, lfn: str) -> list[int]:
+        """Holders we may fetch from. Master copies are durable (the paper
+        assumes the master site 'always has a safe copy'), so a master
+        remains fetchable even while its site is marked failed."""
+        holders = self.catalog.holders(lfn)
+        return sorted(
+            h for h in holders
+            if self.topology.sites[h].online or self.catalog.is_master(lfn, h)
+        )
+
+    def plan_fetch(self, lfn: str, dst: int) -> FetchPlan:
+        raise NotImplementedError
+
+    # Shared helper: evict files in ``order`` (already filtered) until
+    # ``need`` bytes are free at ``site``. Returns evicted list or None.
+    def _evict_until(self, site: int, need: float, order: list[str]) -> list[str]:
+        freed = self.storage.free(site)
+        out: list[str] = []
+        for lfn in order:
+            if freed >= need:
+                break
+            out.append(lfn)
+            freed += self.catalog.size(lfn)
+        return out if freed >= need else []
+
+
+class HRSStrategy(ReplicaStrategy):
+    """Hierarchical Replication Strategy — the paper's contribution (§3.3).
+
+    1. Prefer replicas in the local region; pick the max-available-bandwidth
+       candidate.
+    2. Intra-region fetch with insufficient space -> temporary buffer (the
+       replica is NOT stored; it is dropped when the job completes).
+    3. Inter-region fetch with insufficient space -> two-phase LRU eviction:
+       first local replicas duplicated elsewhere in the same region, then
+       local replicas duplicated in other regions. Masters/pinned are safe.
+       If space still cannot be made, fall back to the temporary buffer.
+    """
+
+    name = "hrs"
+
+    def plan_fetch(self, lfn: str, dst: int) -> FetchPlan:
+        holders = self._online_holders(lfn)
+        region = self.topology.region_of(dst)
+        local = [h for h in holders if self.topology.region_of(h) == region]
+        size = self.catalog.size(lfn)
+        if local:
+            src = _best_bandwidth_source(local, dst, self.topology)
+            store = self.storage.free(dst) >= size
+            return FetchPlan(lfn, src, dst, store=store, evictions=[],
+                             inter_region=False)
+        src = _best_bandwidth_source(holders, dst, self.topology)
+        if self.storage.free(dst) >= size:
+            return FetchPlan(lfn, src, dst, store=True, evictions=[],
+                             inter_region=True)
+        # two-phase LRU eviction
+        lru = [f for f in self.storage.lru_order(dst) if self.storage.evictable(dst, f)]
+        phase1 = [f for f in lru
+                  if self.catalog.duplicated_in_region(f, dst, self.topology)]
+        phase2 = [f for f in lru if f not in phase1]
+        evictions = self._evict_until(dst, size, phase1 + phase2)
+        if evictions:
+            return FetchPlan(lfn, src, dst, store=True, evictions=evictions,
+                             inter_region=True)
+        return FetchPlan(lfn, src, dst, store=False, evictions=[],
+                         inter_region=True)
+
+
+class HRSSinglePhaseStrategy(HRSStrategy):
+    """Ablation: HRS with its two-phase eviction collapsed to plain LRU.
+
+    Isolates the contribution of the paper's novel eviction order (evict
+    region-duplicated replicas first, protecting sole-in-region copies
+    whose re-fetch would cross the WAN) from the rest of HRS (region-
+    priority source selection + temp buffer)."""
+
+    name = "hrs_singlephase"
+
+    def plan_fetch(self, lfn: str, dst: int) -> FetchPlan:
+        holders = self._online_holders(lfn)
+        region = self.topology.region_of(dst)
+        local = [h for h in holders if self.topology.region_of(h) == region]
+        size = self.catalog.size(lfn)
+        if local:
+            src = _best_bandwidth_source(local, dst, self.topology)
+            store = self.storage.free(dst) >= size
+            return FetchPlan(lfn, src, dst, store=store, evictions=[],
+                             inter_region=False)
+        src = _best_bandwidth_source(holders, dst, self.topology)
+        if self.storage.free(dst) >= size:
+            return FetchPlan(lfn, src, dst, store=True, evictions=[],
+                             inter_region=True)
+        lru = [f for f in self.storage.lru_order(dst)
+               if self.storage.evictable(dst, f)]
+        evictions = self._evict_until(dst, size, lru)      # single phase
+        if evictions:
+            return FetchPlan(lfn, src, dst, store=True, evictions=evictions,
+                             inter_region=True)
+        return FetchPlan(lfn, src, dst, store=False, evictions=[],
+                         inter_region=True)
+
+
+class BHRStrategy(ReplicaStrategy):
+    """Bandwidth Hierarchy based Replication (Park et al. [5]), as described
+    in the paper §2/§4.2: replicate if there is space; if the file is
+    available within the same region, access it remotely (no replication);
+    otherwise make room with plain LRU and replicate. Source selection
+    searches *all* sites for the best (max-bandwidth) replica, with no
+    intra-region priority.
+    """
+
+    name = "bhr"
+
+    def plan_fetch(self, lfn: str, dst: int) -> FetchPlan:
+        holders = self._online_holders(lfn)
+        src = _best_bandwidth_source(holders, dst, self.topology)
+        size = self.catalog.size(lfn)
+        inter = self.topology.is_inter_region(src, dst)
+        if self.storage.free(dst) >= size:
+            return FetchPlan(lfn, src, dst, store=True, evictions=[],
+                             inter_region=inter)
+        region = self.topology.region_of(dst)
+        in_region = [h for h in holders if self.topology.region_of(h) == region]
+        if in_region:
+            rsrc = _best_bandwidth_source(in_region, dst, self.topology)
+            return FetchPlan(lfn, rsrc, dst, store=False, evictions=[],
+                             inter_region=False, remote_access=True)
+        lru = [f for f in self.storage.lru_order(dst) if self.storage.evictable(dst, f)]
+        evictions = self._evict_until(dst, size, lru)
+        if evictions:
+            return FetchPlan(lfn, src, dst, store=True, evictions=evictions,
+                             inter_region=inter)
+        return FetchPlan(lfn, src, dst, store=False, evictions=[],
+                         inter_region=inter)
+
+
+class LRUStrategy(ReplicaStrategy):
+    """Plain LRU replication (paper §4.2): always replicate, evicting the
+    least-recently-used files to make room. No region awareness anywhere;
+    the source is simply the max-bandwidth holder over all sites."""
+
+    name = "lru"
+
+    def plan_fetch(self, lfn: str, dst: int) -> FetchPlan:
+        holders = self._online_holders(lfn)
+        src = _best_bandwidth_source(holders, dst, self.topology)
+        size = self.catalog.size(lfn)
+        inter = self.topology.is_inter_region(src, dst)
+        if self.storage.free(dst) >= size:
+            return FetchPlan(lfn, src, dst, store=True, evictions=[],
+                             inter_region=inter)
+        lru = [f for f in self.storage.lru_order(dst) if self.storage.evictable(dst, f)]
+        evictions = self._evict_until(dst, size, lru)
+        if evictions:
+            return FetchPlan(lfn, src, dst, store=True, evictions=evictions,
+                             inter_region=inter)
+        return FetchPlan(lfn, src, dst, store=False, evictions=[],
+                         inter_region=inter)
+
+
+class NoReplicationStrategy(ReplicaStrategy):
+    """Always stream remotely, never store. Lower bound for replication."""
+
+    name = "noreplication"
+
+    def plan_fetch(self, lfn: str, dst: int) -> FetchPlan:
+        holders = self._online_holders(lfn)
+        src = _best_bandwidth_source(holders, dst, self.topology)
+        return FetchPlan(lfn, src, dst, store=False, evictions=[],
+                         inter_region=self.topology.is_inter_region(src, dst))
+
+
+STRATEGIES: dict[str, type[ReplicaStrategy]] = {
+    c.name: c for c in (HRSStrategy, HRSSinglePhaseStrategy, BHRStrategy,
+                        LRUStrategy, NoReplicationStrategy)
+}
+
+
+def make_strategy(name: str, catalog: ReplicaCatalog, topology: GridTopology,
+                  storage: StorageState) -> ReplicaStrategy:
+    return STRATEGIES[name](catalog, topology, storage)

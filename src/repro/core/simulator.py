@@ -1,0 +1,534 @@
+"""Discrete-event data-grid simulator (the paper's GridSim analogue, §4).
+
+Implements the full job lifecycle of the paper:
+
+  submit -> broker schedules (policy) -> site queue -> replica manager fetches
+  missing files (strategy) -> job processes when data ready AND CE free ->
+  done.  Job time = max(transfer time, queue time) + processing time, which is
+  what the event ordering below produces naturally.
+
+Network: event-driven fair-share links with re-rating (each transfer's rate is
+the min over its links of bandwidth/active; rates recomputed on every
+membership change). This reproduces GridSim's contention behaviour — the WAN
+uplink saturates under inter-region traffic — without a packet simulator.
+
+Beyond the paper (fault-tolerance axis of this framework):
+  * site failure/recovery events — non-master replicas lost, queued jobs
+    resubmitted through the broker, in-flight transfers replanned;
+  * straggler (slowdown) events with speculative backup jobs;
+  * all deterministic under a seed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import random as _random
+from typing import Callable, Optional
+
+from .catalog import ReplicaCatalog
+from .replica import FetchPlan, ReplicaStrategy, StorageState, make_strategy
+from .scheduler import Job, SchedulerPolicy, make_scheduler
+from .topology import GridTopology, Link
+
+
+# --------------------------------------------------------------------------
+# events
+# --------------------------------------------------------------------------
+SUBMIT, NET, CPU_DONE, FAIL, RECOVER, SLOW_START, SLOW_END, WATCHDOG = range(8)
+
+# A transfer is complete when less than one byte remains. Sub-byte residue
+# left by float rounding must count as done, otherwise the event loop can
+# starve: eta increments below the clock's ulp make dt == 0 forever.
+_DONE_EPS = 1.0
+
+
+@dataclasses.dataclass
+class _Transfer:
+    tid: int
+    plan: FetchPlan
+    remaining: float
+    links: list[Link]
+    rate: float = 0.0
+    waiters: list["_JobState"] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _JobState:
+    job: Job
+    site: int = -1
+    missing: list[str] = dataclasses.field(default_factory=list)
+    pending_transfers: int = 0
+    temp_files: list[str] = dataclasses.field(default_factory=list)
+    pinned: list[str] = dataclasses.field(default_factory=list)
+    data_ready_time: float = -1.0
+    start_time: float = -1.0
+    done: bool = False
+    is_backup: bool = False
+    twin: Optional["_JobState"] = None   # speculative copy, if any
+    remaining_ops: float = 0.0
+    rounds: int = 0                      # staging rounds (re-fetch after eviction)
+    pin_on_arrival: bool = False         # anti-livelock escalation
+
+
+@dataclasses.dataclass
+class JobRecord:
+    job_id: int
+    job_type: int
+    site: int
+    submit_time: float
+    data_ready_time: float
+    start_time: float
+    finish_time: float
+    inter_comms: int
+    wan_bytes: float
+    resubmits: int = 0
+
+    @property
+    def job_time(self) -> float:
+        return self.finish_time - self.submit_time
+
+
+@dataclasses.dataclass
+class SimResult:
+    records: list[JobRecord]
+    total_inter_comms: int
+    total_wan_bytes: float
+    total_lan_bytes: float
+    makespan: float
+
+    @property
+    def avg_job_time(self) -> float:
+        return sum(r.job_time for r in self.records) / max(1, len(self.records))
+
+    @property
+    def avg_inter_comms(self) -> float:
+        return self.total_inter_comms / max(1, len(self.records))
+
+
+class GridSimulator:
+    def __init__(
+        self,
+        topology: GridTopology,
+        catalog: ReplicaCatalog,
+        *,
+        scheduler: str | SchedulerPolicy = "dataaware",
+        strategy: str | ReplicaStrategy = "hrs",
+        seed: int = 0,
+        speculative_backups: bool = False,
+        straggler_threshold: float = 3.0,
+    ) -> None:
+        self.topology = topology
+        self.catalog = catalog
+        self.storage = StorageState(catalog, topology)
+        self.scheduler = (
+            scheduler if isinstance(scheduler, SchedulerPolicy)
+            else make_scheduler(scheduler, catalog, topology, seed=seed)
+        )
+        self.strategy = (
+            strategy if isinstance(strategy, ReplicaStrategy)
+            else make_strategy(strategy, catalog, topology, self.storage)
+        )
+        self.rng = _random.Random(seed)
+        self.speculative_backups = speculative_backups
+        self.straggler_threshold = straggler_threshold
+
+        self._q: list[tuple[float, int, int, object]] = []
+        self._seq = 0
+        self.now = 0.0
+        self._net_version = 0
+        self._transfers: dict[int, _Transfer] = {}
+        self._inflight: dict[tuple[int, str], _Transfer] = {}
+        self._tid = 0
+        # per-site CPU: FIFO queue of ready jobs + the running job
+        self._cpu_queue: dict[int, list[_JobState]] = {
+            s.site_id: [] for s in topology.sites
+        }
+        self._running: dict[int, Optional[_JobState]] = {
+            s.site_id: None for s in topology.sites
+        }
+        self._cpu_version: dict[int, int] = {s.site_id: 0 for s in topology.sites}
+        self._cpu_last_update: dict[int, float] = {s.site_id: 0.0 for s in topology.sites}
+        self._site_jobs: dict[int, list[_JobState]] = {
+            s.site_id: [] for s in topology.sites
+        }
+
+        self.records: list[JobRecord] = []
+        self._inter_comms: dict[int, int] = {}
+        self._wan_bytes: dict[int, float] = {}
+        self._resubmits: dict[int, int] = {}
+        self.total_wan_bytes = 0.0
+        self.total_lan_bytes = 0.0
+        self._n_expected = 0
+
+    # -- event plumbing ----------------------------------------------------
+    def _push(self, t: float, kind: int, payload: object) -> None:
+        self._seq += 1
+        heapq.heappush(self._q, (t, self._seq, kind, payload))
+
+    def submit_job(self, job: Job, at: float) -> None:
+        self._n_expected += 1
+        job.submit_time = at
+        self._push(at, SUBMIT, job)
+
+    def inject_failure(self, site: int, at: float, duration: float) -> None:
+        self._push(at, FAIL, site)
+        self._push(at + duration, RECOVER, site)
+
+    def inject_slowdown(self, site: int, at: float, duration: float,
+                        factor: float = 0.1) -> None:
+        self._push(at, SLOW_START, (site, factor))
+        self._push(at + duration, SLOW_END, (site, factor))
+
+    # -- network -----------------------------------------------------------
+    def _net_advance(self) -> None:
+        dt = self.now - getattr(self, "_net_last", 0.0)
+        if dt > 0:
+            for tr in self._transfers.values():
+                tr.remaining = max(0.0, tr.remaining - tr.rate * dt)
+        self._net_last = self.now
+
+    def _net_rerate(self) -> None:
+        for tr in self._transfers.values():
+            tr.rate = min(l.share() for l in tr.links)
+        self._net_version += 1
+        nxt = None
+        for tr in self._transfers.values():
+            if tr.rate <= 0:
+                continue
+            eta = self.now + tr.remaining / tr.rate
+            if nxt is None or eta < nxt:
+                nxt = eta
+        if nxt is not None:
+            self._push(nxt, NET, self._net_version)
+
+    def _start_transfer(self, plan: FetchPlan, js: _JobState) -> None:
+        key = (plan.dst, plan.lfn)
+        if key in self._inflight and self._inflight[key].plan.store:
+            # another job at this site is already fetching it; piggyback
+            self._inflight[key].waiters.append(js)
+            return
+        self._net_advance()
+        size = self.catalog.size(plan.lfn)
+        links = self.topology.links_for(plan.src, plan.dst)
+        for l in links:
+            l.active += 1
+        # evictions + space reservation happen at transfer start
+        if plan.store:
+            for victim in plan.evictions:
+                self.storage.remove(plan.dst, victim)
+            self.topology.sites[plan.dst].used_storage += size  # reserve
+        self.storage.pin(plan.src, plan.lfn)   # source can't be evicted mid-copy
+        self._tid += 1
+        tr = _Transfer(self._tid, plan, size, links, waiters=[js])
+        self._transfers[tr.tid] = tr
+        if plan.store:
+            self._inflight[key] = tr
+        if plan.inter_region:
+            self._inter_comms[js.job.job_id] = self._inter_comms.get(js.job.job_id, 0) + 1
+            self._wan_bytes[js.job.job_id] = self._wan_bytes.get(js.job.job_id, 0.0) + size
+            self.total_wan_bytes += size
+        else:
+            self.total_lan_bytes += size
+        self._net_rerate()
+
+    def _finish_transfer(self, tr: _Transfer) -> None:
+        plan = tr.plan
+        self._transfers.pop(tr.tid, None)
+        self._inflight.pop((plan.dst, plan.lfn), None)
+        for l in tr.links:
+            l.active -= 1
+        self.storage.unpin(plan.src, plan.lfn)
+        self.storage.touch(plan.src, plan.lfn, self.now)
+        if plan.store:
+            # un-reserve, then commit properly through StorageState
+            self.topology.sites[plan.dst].used_storage -= self.catalog.size(plan.lfn)
+            self.storage.add(plan.dst, plan.lfn, self.now)
+        for js in tr.waiters:
+            if js.done:
+                continue
+            if plan.store:
+                if js.pin_on_arrival:
+                    self.storage.pin(plan.dst, plan.lfn)
+                    js.pinned.append(plan.lfn)
+            else:
+                js.temp_files.append(plan.lfn)
+            js.pending_transfers -= 1
+            self._fetch_next(js)
+        self._net_rerate()
+
+    def _abort_transfers_touching(self, site: int) -> None:
+        """Failure handling: drop transfers with src or dst at a failed site."""
+        self._net_advance()
+        dead = [t for t in self._transfers.values()
+                if t.plan.src == site or t.plan.dst == site]
+        for tr in dead:
+            self._transfers.pop(tr.tid, None)
+            self._inflight.pop((tr.plan.dst, tr.plan.lfn), None)
+            for l in tr.links:
+                l.active -= 1
+            if self.topology.sites[tr.plan.src].online or \
+               self.catalog.has_replica(tr.plan.lfn, tr.plan.src):
+                self.storage.unpin(tr.plan.src, tr.plan.lfn)
+            if tr.plan.store:
+                self.topology.sites[tr.plan.dst].used_storage -= \
+                    self.catalog.size(tr.plan.lfn)
+            for js in tr.waiters:
+                if js.done or js.site == site:
+                    continue  # jobs at the failed site are resubmitted anyway
+                # replan this file from surviving replicas
+                js.missing.insert(0, tr.plan.lfn)
+                js.pending_transfers -= 1
+                self._fetch_next(js)
+        self._net_rerate()
+
+    # -- job lifecycle -----------------------------------------------------
+    #
+    # Staging semantics: replicas are pinned only while a job is *running*
+    # (processing). Queued jobs do not pin — with deep queues, schedule-time
+    # pinning would freeze every SE solid and no strategy could ever evict.
+    # A job re-verifies its working set when it reaches the CE; anything
+    # evicted in the meantime is re-staged (another round). After 3 rounds
+    # the job pins files as they arrive (anti-livelock escalation).
+    def _schedule(self, job: Job) -> None:
+        site = self.scheduler.select_site(job)
+        js = _JobState(job=job, site=site, remaining_ops=job.length)
+        self._site_jobs[site].append(js)
+        self.topology.sites[site].queued_work += job.length
+        js.missing = [l for l in job.required if not self.storage.holds(site, l)]
+        for lfn in job.required:
+            self.storage.touch(site, lfn, self.now)
+        self._fetch_next(js)
+
+    def _fetch_next(self, js: _JobState) -> None:
+        """Files are accessed sequentially within a job (paper §4.1): one
+        transfer in flight per job."""
+        if js.done:
+            return
+        while js.missing:
+            lfn = js.missing.pop(0)
+            if self.storage.holds(js.site, lfn):
+                self.storage.touch(js.site, lfn, self.now)
+                continue
+            plan = self.strategy.plan_fetch(lfn, js.site)
+            js.pending_transfers += 1
+            self._start_transfer(plan, js)
+            return
+        if js.pending_transfers == 0:
+            if js.data_ready_time < 0:
+                js.data_ready_time = self.now
+            self._enqueue_cpu(js)
+
+    def _working_set_missing(self, js: _JobState) -> list[str]:
+        return [f for f in js.job.required
+                if f not in js.temp_files and not self.storage.holds(js.site, f)]
+
+    def _enqueue_cpu(self, js: _JobState) -> None:
+        self._cpu_queue[js.site].append(js)
+        self._maybe_start_cpu(js.site)
+
+    def _cpu_advance(self, site: int) -> None:
+        run = self._running[site]
+        if run is not None:
+            dt = self.now - self._cpu_last_update[site]
+            run.remaining_ops = max(
+                0.0, run.remaining_ops - dt * self.topology.sites[site].compute_capacity
+            )
+        self._cpu_last_update[site] = self.now
+
+    def _maybe_start_cpu(self, site: int) -> None:
+        if self._running[site] is not None or not self.topology.sites[site].online:
+            return
+        q = self._cpu_queue[site]
+        while q:
+            js = q.pop(0)
+            if js.done:
+                continue
+            missing = self._working_set_missing(js)
+            if missing:
+                # part of the staged set was evicted while queued: re-stage
+                js.rounds += 1
+                if js.rounds >= 3:
+                    js.pin_on_arrival = True
+                js.missing = missing
+                self._fetch_next(js)
+                continue
+            # pin the working set for the duration of processing
+            for f in js.job.required:
+                if self.storage.holds(site, f) and f not in js.pinned:
+                    self.storage.pin(site, f)
+                    js.pinned.append(f)
+                self.storage.touch(site, f, self.now)
+            js.start_time = self.now
+            self._running[site] = js
+            self._cpu_last_update[site] = self.now
+            self._reschedule_cpu(site)
+            if self.speculative_backups and not js.is_backup and js.twin is None:
+                expected = js.job.length / self.topology.sites[site].compute_capacity
+                self._push(self.now + self.straggler_threshold * expected, WATCHDOG, js)
+            return
+
+    def _reschedule_cpu(self, site: int) -> None:
+        js = self._running[site]
+        if js is None:
+            return
+        self._cpu_version[site] += 1
+        cap = self.topology.sites[site].compute_capacity
+        eta = self.now + js.remaining_ops / cap
+        self._push(eta, CPU_DONE, (site, self._cpu_version[site]))
+
+    def _finish_job(self, js: _JobState) -> None:
+        js.done = True
+        site = js.site
+        self.topology.sites[site].queued_work -= js.job.length
+        for lfn in js.pinned:
+            self.storage.unpin(site, lfn)
+        js.temp_files.clear()   # paper: temp buffer dropped after job completes
+        if js in self._site_jobs[site]:
+            self._site_jobs[site].remove(js)
+        twin = js.twin
+        if twin is not None and not twin.done:
+            self._cancel_job(twin)
+        jid = js.job.job_id
+        self.records.append(JobRecord(
+            job_id=jid, job_type=js.job.job_type, site=site,
+            submit_time=js.job.submit_time, data_ready_time=js.data_ready_time,
+            start_time=js.start_time, finish_time=self.now,
+            inter_comms=self._inter_comms.get(jid, 0),
+            wan_bytes=self._wan_bytes.get(jid, 0.0),
+            resubmits=self._resubmits.get(jid, 0),
+        ))
+
+    def _cancel_job(self, js: _JobState) -> None:
+        js.done = True
+        site = js.site
+        self.topology.sites[site].queued_work -= js.job.length
+        for lfn in js.pinned:
+            self.storage.unpin(site, lfn)
+        js.temp_files.clear()
+        if js in self._cpu_queue[site]:
+            self._cpu_queue[site].remove(js)
+        if self._running[site] is js:
+            self._cpu_advance(site)
+            self._running[site] = None
+            self._cpu_version[site] += 1
+            self._maybe_start_cpu(site)
+        if js in self._site_jobs[site]:
+            self._site_jobs[site].remove(js)
+
+    # -- failures / stragglers ----------------------------------------------
+    def _fail_site(self, site: int) -> None:
+        st = self.topology.sites[site]
+        if not st.online:
+            return
+        self._cpu_advance(site)
+        st.online = False
+        self._abort_transfers_touching(site)
+        # lose non-master replicas (the SE is gone); masters are durable
+        for lfn in list(self.storage._contents[site]):
+            if not self.catalog.is_master(lfn, site):
+                self.storage._pins[site].pop(lfn, None)
+                del self.storage._contents[site][lfn]
+                st.used_storage -= self.catalog.size(lfn)
+                self.catalog.remove_replica(lfn, site)
+        # resubmit every job that was at this site
+        victims = list(self._site_jobs[site])
+        self._site_jobs[site].clear()
+        self._cpu_queue[site].clear()
+        self._running[site] = None
+        self._cpu_version[site] += 1
+        for js in victims:
+            if js.done:
+                continue
+            js.done = True
+            st.queued_work -= js.job.length
+            jid = js.job.job_id
+            if js.twin is not None and not js.twin.done:
+                continue  # its twin survives; no resubmission needed
+            self._resubmits[jid] = self._resubmits.get(jid, 0) + 1
+            self._push(self.now, SUBMIT, js.job)
+            self._n_expected += 0  # same job id, record count unchanged
+
+    def _recover_site(self, site: int) -> None:
+        self.topology.sites[site].online = True
+        self._maybe_start_cpu(site)
+
+    def _watchdog(self, js: _JobState) -> None:
+        """Speculative backup: if js still running past threshold, clone it."""
+        if js.done or self._running[js.site] is not js:
+            return
+        job = js.job
+        backup_site = self.scheduler.select_site(job)
+        if backup_site == js.site:
+            candidates = [s for s in self.topology.online_sites() if s != js.site]
+            if not candidates:
+                return
+            backup_site = min(
+                candidates, key=lambda s: (self.topology.sites[s].relative_load(), s))
+        twin = _JobState(job=job, site=backup_site, is_backup=True,
+                         remaining_ops=job.length)
+        twin.twin = js
+        js.twin = twin
+        self._site_jobs[backup_site].append(twin)
+        self.topology.sites[backup_site].queued_work += job.length
+        twin.missing = [l for l in job.required
+                        if not self.storage.holds(backup_site, l)]
+        self._fetch_next(twin)
+
+    # -- main loop -----------------------------------------------------------
+    def run(self, until: float = float("inf")) -> SimResult:
+        self._net_last = 0.0
+        while self._q:
+            t, _, kind, payload = heapq.heappop(self._q)
+            if t > until:
+                break
+            self.now = t
+            if kind == SUBMIT:
+                # submit_time was stamped at first submission; resubmitted
+                # jobs (failures) keep it so job_time spans the whole outage.
+                self._schedule(payload)  # type: ignore[arg-type]
+            elif kind == NET:
+                if payload != self._net_version:
+                    continue
+                self._net_advance()
+                done = [tr for tr in self._transfers.values()
+                        if tr.remaining <= _DONE_EPS]
+                for tr in done:
+                    self._finish_transfer(tr)
+                if not done:
+                    self._net_rerate()
+            elif kind == CPU_DONE:
+                site, ver = payload  # type: ignore[misc]
+                if ver != self._cpu_version[site]:
+                    continue
+                self._cpu_advance(site)
+                js = self._running[site]
+                if js is None:
+                    continue
+                self._running[site] = None
+                self._finish_job(js)
+                self._maybe_start_cpu(site)
+            elif kind == FAIL:
+                self._fail_site(payload)  # type: ignore[arg-type]
+            elif kind == RECOVER:
+                self._recover_site(payload)  # type: ignore[arg-type]
+            elif kind == SLOW_START:
+                site, factor = payload  # type: ignore[misc]
+                self._cpu_advance(site)
+                self.topology.sites[site].compute_capacity *= factor
+                self._reschedule_cpu(site)
+            elif kind == SLOW_END:
+                site, factor = payload  # type: ignore[misc]
+                self._cpu_advance(site)
+                self.topology.sites[site].compute_capacity /= factor
+                self._reschedule_cpu(site)
+            elif kind == WATCHDOG:
+                self._watchdog(payload)  # type: ignore[arg-type]
+        total_ic = sum(r.inter_comms for r in self.records)
+        return SimResult(
+            records=self.records,
+            total_inter_comms=total_ic,
+            total_wan_bytes=self.total_wan_bytes,
+            total_lan_bytes=self.total_lan_bytes,
+            makespan=self.now,
+        )

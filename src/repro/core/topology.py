@@ -1,0 +1,139 @@
+"""Hierarchical two-level grid topology (paper §3.1).
+
+Regions are connected by slow inter-region links (WAN in the paper; cross-pod
+DCN on a TPU cluster). Sites inside a region share a fast intra-region fabric
+(LAN; ICI on a pod). Every site has a Computing Element (capacity) and a
+Storage Element (capacity in bytes).
+
+Bandwidth model: each site has an outbound NIC at LAN speed; each region has
+a WAN uplink. An intra-region transfer is bottlenecked by the source NIC; an
+inter-region transfer traverses {source NIC, source-region WAN uplink} and is
+bottlenecked by the slower (in the paper's configuration always the WAN,
+10 Mbps vs 1000 Mbps). Links are fair-shared among concurrent transfers.
+
+Units are abstract but consistent: bandwidth in bytes/sec, storage in bytes,
+compute in ops/sec ("MIPS" in the paper, FLOP/s on a TPU cluster).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+
+@dataclasses.dataclass
+class Site:
+    """A grid site: CE + SE (paper Fig. 1). Maps to a TPU host."""
+
+    site_id: int
+    region_id: int
+    compute_capacity: float          # ops/sec (paper: MIPS; here FLOP/s)
+    storage_capacity: float          # bytes (paper: 10 GB per SE)
+    # -- dynamic state, owned by the simulator / runtime --
+    used_storage: float = 0.0
+    queued_work: float = 0.0         # ops queued (paper: SizeofJobs_i, in MI)
+    online: bool = True
+
+    @property
+    def free_storage(self) -> float:
+        return self.storage_capacity - self.used_storage
+
+    def relative_load(self) -> float:
+        """Paper eq. (2): RelativeLoad_i = SizeofJobs_i / C_i."""
+        return self.queued_work / self.compute_capacity
+
+
+@dataclasses.dataclass
+class Region:
+    region_id: int
+    site_ids: list[int]
+
+
+@dataclasses.dataclass
+class Link:
+    """A shared fair-share link. Transfers on it split bandwidth equally."""
+
+    name: str
+    bandwidth: float                 # bytes/sec aggregate
+    active: int = 0                  # number of concurrent transfers
+
+    def share(self, n: int | None = None) -> float:
+        n = self.active if n is None else n
+        return self.bandwidth / max(1, n)
+
+
+class GridTopology:
+    """Two-level hierarchy: regions of sites (see module docstring)."""
+
+    def __init__(
+        self,
+        n_regions: int,
+        sites_per_region: int,
+        *,
+        lan_bandwidth: float,
+        wan_bandwidth: float,
+        storage_capacity: float,
+        compute_capacities: Iterable[float] | None = None,
+        seed: int = 0,
+    ) -> None:
+        self.n_regions = n_regions
+        self.sites_per_region = sites_per_region
+        self.lan_bandwidth = lan_bandwidth
+        self.wan_bandwidth = wan_bandwidth
+        self.sites: list[Site] = []
+        self.regions: list[Region] = []
+        caps = list(compute_capacities) if compute_capacities is not None else None
+        # Deterministic heterogeneous capacities when not given: the paper
+        # assumes heterogeneous MIPS but gives no table; spread 1x..4x.
+        sid = 0
+        for r in range(n_regions):
+            ids = []
+            for _ in range(sites_per_region):
+                if caps is not None:
+                    cap = caps[sid % len(caps)]
+                else:
+                    cap = 1e9 * (1 + ((sid * 2654435761 + seed) % 4))
+                self.sites.append(
+                    Site(site_id=sid, region_id=r, compute_capacity=cap,
+                         storage_capacity=storage_capacity)
+                )
+                ids.append(sid)
+                sid += 1
+            self.regions.append(Region(region_id=r, site_ids=ids))
+        self.nic_links = [Link(f"nic{s.site_id}", lan_bandwidth) for s in self.sites]
+        self.wan_links = [Link(f"wan{r}", wan_bandwidth) for r in range(n_regions)]
+
+    # -- structure queries ------------------------------------------------
+    @property
+    def n_sites(self) -> int:
+        return len(self.sites)
+
+    def region_of(self, site_id: int) -> int:
+        return self.sites[site_id].region_id
+
+    def same_region(self, a: int, b: int) -> bool:
+        return self.region_of(a) == self.region_of(b)
+
+    def sites_in_region(self, region_id: int) -> list[int]:
+        return list(self.regions[region_id].site_ids)
+
+    def online_sites(self) -> list[int]:
+        return [s.site_id for s in self.sites if s.online]
+
+    # -- bandwidth model ---------------------------------------------------
+    def links_for(self, src: int, dst: int) -> list[Link]:
+        """Links traversed by a src->dst transfer (source-side model)."""
+        if self.same_region(src, dst):
+            return [self.nic_links[src]]
+        return [self.nic_links[src], self.wan_links[self.region_of(src)]]
+
+    def point_bandwidth(self, src: int, dst: int) -> float:
+        """Available bandwidth if one more transfer joined src->dst.
+
+        This is what HRS uses for "maximum bandwidth available" replica
+        selection: the bottleneck link's equal share with one more flow.
+        """
+        return min(link.share(link.active + 1) for link in self.links_for(src, dst))
+
+    def is_inter_region(self, src: int, dst: int) -> bool:
+        return not self.same_region(src, dst)

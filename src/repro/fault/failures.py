@@ -1,0 +1,105 @@
+"""Fault-tolerance harness for the training loop.
+
+The DES (repro.core.simulator) studies failures at grid scale; this module
+is the *runtime* side: a supervisor that wraps a step function with
+checkpoint/restart, deterministic failure injection, straggler detection,
+and elastic re-meshing. On real hardware the failure signal comes from the
+cluster manager; here ``FailurePlan`` injects it so tests/examples can prove
+the recovery path end to end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+from repro.checkpoint.ckpt import (latest_step, restore_checkpoint,
+                                   save_checkpoint)
+
+
+@dataclasses.dataclass(frozen=True)
+class FailurePlan:
+    """fail_at_steps: steps at which a simulated node failure kills the run
+    (state is lost, restart restores the latest checkpoint).
+    slow_steps: steps that take ``straggle_factor`` x longer (straggler)."""
+
+    fail_at_steps: tuple[int, ...] = ()
+    slow_steps: tuple[int, ...] = ()
+    straggle_factor: float = 5.0
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class SupervisorStats:
+    restarts: int = 0
+    steps_run: int = 0
+    steps_wasted: int = 0
+    stragglers_mitigated: int = 0
+
+
+class TrainingSupervisor:
+    """Checkpoint/restart + straggler mitigation around a pure step fn.
+
+    step_fn(state, step_idx) -> (state, metrics). ``state`` must be a
+    checkpointable pytree (params + opt state). Straggler mitigation here is
+    deadline-based re-issue: a step exceeding ``deadline x median`` is
+    re-executed (deterministic step functions make the re-issue free of
+    divergence — the backup result wins, as in the DES's speculative twins).
+    """
+
+    def __init__(self, step_fn: Callable, ckpt_dir: str, *,
+                 ckpt_every: int = 10, keep_last: int = 3,
+                 plan: FailurePlan = FailurePlan(),
+                 deadline: float = 4.0) -> None:
+        self.step_fn = step_fn
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.plan = plan
+        self.deadline = deadline
+        self.stats = SupervisorStats()
+        self._durations: list[float] = []
+
+    def _maybe_checkpoint(self, state, step: int) -> None:
+        if step % self.ckpt_every == 0:
+            save_checkpoint(state, self.ckpt_dir, step)
+
+    def run(self, state, n_steps: int, *, start_step: int = 0):
+        """Run to n_steps with recovery; returns (state, history)."""
+        history: list[dict[str, Any]] = []
+        step = start_step
+        failed_already: set[int] = set()
+        while step < n_steps:
+            try:
+                if step in self.plan.fail_at_steps and step not in failed_already:
+                    failed_already.add(step)
+                    raise SimulatedFailure(f"node failure at step {step}")
+                t0 = time.perf_counter()
+                state, metrics = self.step_fn(state, step)
+                dt = time.perf_counter() - t0
+                if step in self.plan.slow_steps:
+                    dt *= self.plan.straggle_factor     # simulated straggler
+                med = sorted(self._durations)[len(self._durations) // 2] \
+                    if self._durations else dt
+                if self._durations and dt > self.deadline * med:
+                    # re-issue the step (speculative backup wins)
+                    state, metrics = self.step_fn(state, step)
+                    self.stats.stragglers_mitigated += 1
+                self._durations.append(dt)
+                history.append({"step": step, **{k: float(v)
+                                                 for k, v in metrics.items()}})
+                self.stats.steps_run += 1
+                step += 1
+                self._maybe_checkpoint(state, step)
+            except SimulatedFailure:
+                self.stats.restarts += 1
+                last = latest_step(self.ckpt_dir)
+                if last is None:
+                    raise RuntimeError("failure before first checkpoint")
+                state, _ = restore_checkpoint(self.ckpt_dir, last, like=state)
+                self.stats.steps_wasted += step - last
+                step = last
+        return state, history

@@ -1,0 +1,134 @@
+"""Flash attention Pallas TPU kernel.
+
+Grid = (batch, q_heads, num_q_blocks, num_kv_blocks); the kv-block axis is
+innermost (sequentially executed on TPU), so the online-softmax running
+state (m, l, acc) lives in VMEM scratch that persists across kv steps of
+one (b, h, qi) program family. BlockSpecs stream one (block_q x head_dim)
+Q tile and one (block_k x head_dim) K/V tile HBM->VMEM per step; GQA is
+handled in the K/V index_map (kv head = q head // group) so grouped K/V
+tiles are fetched once per group without materializing a repeat.
+
+Tiles are (128 x 128)-aligned for the MXU; the causal/window masks are
+built from broadcasted iotas on the VPU. Softcap (gemma2) is a tanh on the
+logits tile. Tiles fully masked by causal/window bounds are skipped with
+@pl.when, eliding their MXU work.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, seq_k: int,
+                  causal: bool, window: int | None, softcap: float | None,
+                  q_offset: int, kv_len: int | None):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # block-level skip: tiles fully masked by causal/window bounds
+    run = jnp.bool_(True)
+    if causal:
+        run &= kj * block_k <= q_offset + (qi + 1) * block_q - 1
+    if window is not None:
+        run &= (kj + 1) * block_k - 1 > q_offset + qi * block_q - window
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) \
+            * (q.shape[-1] ** -0.5)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = kj * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < seq_k
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        if kv_len is not None:
+            mask &= k_pos < kv_len
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal=True, window=None,
+                           softcap=None, q_offset=0, kv_len=None,
+                           block_q=128, block_k=128, interpret=False):
+    """q: (B, H, Sq, hd); k, v: (B, KV, Skv, hd); H = G * KV.
+    Returns (B, H, Sq, hd). hd should be a multiple of 128 on real TPUs
+    (any hd works in interpret mode)."""
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    pq = (-Sq) % block_q
+    pk = (-Skv) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq = (Sq + pq) // block_q
+    nk = (Skv + pk) // block_k
+    grid = (B, H, nq, nk)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, seq_k=Skv,
+        causal=causal, window=window, softcap=softcap, q_offset=q_offset,
+        kv_len=kv_len)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq + pq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

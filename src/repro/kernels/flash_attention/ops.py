@@ -1,0 +1,40 @@
+"""Jitted public wrapper: picks the Pallas kernel (TPU) or the jnp oracle.
+
+On this CPU container the Pallas TPU kernel runs in interpret mode for
+validation only; model code routes through repro.models.attention, which
+calls into here when ``use_pallas`` is on (real TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention_kernel
+from .ref import flash_attention_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "q_offset", "kv_len",
+                     "block_q", "block_k", "backend"))
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    q_offset=0, kv_len=None, block_q=128, block_k=128,
+                    backend="auto"):
+    """q: (B, H, Sq, hd); k, v: (B, KV, Skv, hd) -> (B, H, Sq, hd)."""
+    use_pallas = backend == "pallas" or (
+        backend == "auto" and jax.default_backend() == "tpu")
+    if use_pallas:
+        return flash_attention_kernel(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset, kv_len=kv_len, block_q=block_q,
+            block_k=block_k)
+    if backend == "interpret":
+        return flash_attention_kernel(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset, kv_len=kv_len, block_q=block_q,
+            block_k=block_k, interpret=True)
+    return flash_attention_ref(q, k, v, causal=causal, window=window,
+                               softcap=softcap, q_offset=q_offset,
+                               kv_len=kv_len)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash attention kernel (materialized scores)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                        q_offset=0, kv_len=None):
+    """q: (B, H, Sq, hd); k, v: (B, KV, Skv, hd). Returns (B, H, Sq, hd)."""
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.reshape(B, KV, G, Sq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf) * (hd ** -0.5)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    if kv_len is not None:
+        mask &= k_pos[None, :] < kv_len
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, vf)
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)

@@ -1,0 +1,99 @@
+"""Mamba1 selective-scan Pallas TPU kernel.
+
+TPU adaptation of the CUDA selective-scan: the GPU kernel parallelizes the
+recurrence across warps with shuffle-based prefix products; TPUs have no
+warp shuffles, so we restructure as a *chunked VMEM-resident recurrence*:
+
+  grid = (batch, channel_blocks, seq_chunks)   # seq axis innermost
+  per step: a (chunk x bd) tile of dt/x and (chunk x N) tiles of B/C are
+  streamed HBM->VMEM; the state h (bd x N) persists in VMEM scratch across
+  the sequential seq_chunks axis; inside the chunk a fori_loop applies
+    h = exp(dt*A) * h + (dt*x) * B;   y_t = (h @ C_t) + D*x_t
+  entirely on the VPU (elementwise over a (bd, N) tile per step; bd is a
+  multiple of 128 lanes).
+
+The channel axis parallelizes across programs (channels are independent in
+mamba1), which is what the MXU-free recurrence needs for occupancy.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
+                 y_ref, hout_ref, h_scr, *, chunk: int, bd: int, n: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[...].astype(jnp.float32)               # (bd, N)
+    dskip = d_ref[...].astype(jnp.float32)           # (bd,)
+
+    def step(t, carry):
+        h = carry
+        dt = dt_ref[0, t, :].astype(jnp.float32)     # (bd,)
+        xt = x_ref[0, t, :].astype(jnp.float32)      # (bd,)
+        bt = b_ref[0, t, :].astype(jnp.float32)      # (N,)
+        ct = c_ref[0, t, :].astype(jnp.float32)      # (N,)
+        da = jnp.exp(dt[:, None] * a)                # (bd, N)
+        h = da * h + (dt * xt)[:, None] * bt[None, :]
+        y = jnp.sum(h * ct[None, :], axis=1) + dskip * xt
+        y_ref[0, t, :] = y.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(ci == nc - 1)
+    def _finalize():
+        hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+def selective_scan_kernel(x, dt, B, C, A, D, h0, *, chunk: int = 256,
+                          block_d: int = 512, interpret: bool = False):
+    """x, dt: (Bz, S, Di); B, C: (Bz, S, N); A: (Di, N); D: (Di,);
+    h0: (Bz, Di, N). Returns (y (Bz, S, Di), h_last (Bz, Di, N))."""
+    Bz, S, Di = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, S)
+    block_d = min(block_d, Di)
+    assert S % chunk == 0, "pad S to a chunk multiple"
+    assert Di % block_d == 0
+    nd = Di // block_d
+    nc = S // chunk
+    grid = (Bz, nd, nc)
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk, bd=block_d, n=N)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),  # x
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),  # dt
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),        # B
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),        # C
+            pl.BlockSpec((block_d, N), lambda b, d, c: (d, 0)),            # A
+            pl.BlockSpec((block_d,), lambda b, d, c: (d,)),                # D
+            pl.BlockSpec((1, block_d, N), lambda b, d, c: (b, d, 0)),      # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, block_d, N), lambda b, d, c: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bz, S, Di), x.dtype),
+            jax.ShapeDtypeStruct((Bz, Di, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, B, C, A, D, h0)
+    return y, h_last

@@ -1,0 +1,24 @@
+"""Jitted public wrapper for the selective scan (pallas / interpret / ref)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import selective_scan_kernel
+from .ref import selective_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "backend"))
+def selective_scan(x, dt, B, C, A, D, h0, *, chunk=256, block_d=512,
+                   backend="auto"):
+    use_pallas = backend == "pallas" or (
+        backend == "auto" and jax.default_backend() == "tpu")
+    if use_pallas:
+        return selective_scan_kernel(x, dt, B, C, A, D, h0, chunk=chunk,
+                                     block_d=block_d)
+    if backend == "interpret":
+        return selective_scan_kernel(x, dt, B, C, A, D, h0, chunk=chunk,
+                                     block_d=block_d, interpret=True)
+    return selective_scan_ref(x, dt, B, C, A, D, h0)

@@ -1,0 +1,29 @@
+"""Sequential pure-jnp oracle for the selective scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, dt, B, C, A, D, h0):
+    """x, dt: (Bz, S, Di); B, C: (Bz, S, N); A: (Di, N); D: (Di,);
+    h0: (Bz, Di, N). Returns (y, h_last)."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs                    # (Bz,Di),(Bz,Di),(Bz,N),(Bz,N)
+        da = jnp.exp(dtt[..., None] * Af[None])     # (Bz, Di, N)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct) + D[None] * xt
+        return h, y
+
+    h_last, ys = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+         Bf.swapaxes(0, 1), Cf.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(x.dtype), h_last

@@ -1,0 +1,235 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 placeholder devices. Do not import
+this module from tests (they must see one device) — run it as a script:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+      --shape train_4k --mesh single,multi --out results/dryrun
+
+Per cell it records memory_analysis, cost_analysis (per-device FLOPs/bytes)
+and the per-device collective-bytes breakdown parsed from the compiled HLO,
+which launch/roofline.py turns into the three roofline terms.
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ArchConfig, arch_ids, cells, get_config
+from repro.models import model as M
+from repro.train.optimizer import init_opt_state
+from repro.train.train_step import TrainConfig, make_train_step
+from repro.launch.hloanalysis import analyze as hlo_analyze
+from repro.launch.mesh import dp_size, make_production_mesh
+from repro.launch.shardings import (batch_shardings, cache_shardings,
+                                    param_shardings, replicated)
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|f64|s64|c64)"
+                       r"\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "c64": 8}
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-device bytes produced by each collective kind (result shapes)."""
+    out = {k: 0.0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for kind in COLLECTIVES:
+            token = f" {kind}("
+            if token not in line and f" {kind}-start(" not in line:
+                continue
+            lhs = line.split(" = ")
+            if len(lhs) < 2:
+                continue
+            rhs = lhs[1]
+            cut = rhs.find(kind)
+            shapes = _SHAPE_RE.findall(rhs[:cut])
+            for dt, dims in shapes:
+                n = 1
+                if dims:
+                    for d in dims.split(","):
+                        n *= int(d)
+                out[kind] += n * _DTYPE_BYTES[dt]
+            counts[kind] += 1
+            break
+    out["counts"] = counts
+    return out
+
+
+def pick_n_micro(cfg: ArchConfig, shape, mesh) -> int:
+    """Gradient-accumulation depth: target ~4k (8k for small d_model) tokens
+    per device per microbatch; must divide the per-device batch."""
+    bd = max(1, shape.global_batch // dp_size(mesh))
+    seq = shape.seq_len if not cfg.enc_dec else shape.seq_len
+    target = 8192 if cfg.d_model <= 2048 else 4096
+    n = max(1, min(bd, (bd * seq) // target))
+    while bd % n:
+        n -= 1
+    return n
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, n_micro: int | None = None,
+               remat: bool = True, grad_rs: bool = False):
+    """Returns (lowered, meta). Raises on sharding/compile errors."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    from repro.launch.mesh import data_axes as _da
+    from repro.models import shardctx
+    shardctx.set_mesh(mesh, _da(mesh))
+    key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    max_enc = shape.seq_len
+    max_dec = max(1, shape.seq_len // 8)
+
+    def init_p(k):
+        return M.init_params(cfg, k, max_enc=max_enc, max_dec=max_dec)
+
+    params_sds = jax.eval_shape(init_p, key_sds)
+    p_sh = param_shardings(mesh, params_sds)
+
+    if shape.kind == "train":
+        nm = n_micro if n_micro is not None else pick_n_micro(cfg, shape, mesh)
+        tcfg = TrainConfig(n_microbatches=nm, remat=remat)
+        opt_sds = jax.eval_shape(init_opt_state, params_sds)
+        o_sh = param_shardings(mesh, opt_sds)
+        batch_sds = M.input_specs(cfg, shape)
+        b_sh = batch_shardings(mesh, batch_sds)
+        from repro.launch.mesh import data_axes
+        step = make_train_step(cfg, tcfg, mesh=mesh, dp_axes=data_axes(mesh),
+                               grad_shardings=p_sh if grad_rs else None)
+        jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+        meta = {"mode": "train", "n_micro": nm}
+    elif shape.kind == "prefill":
+        batch_sds = M.input_specs(cfg, shape)
+        b_sh = batch_shardings(mesh, batch_sds)
+        fn = lambda p, b: M.prefill(cfg, p, b)
+        # pin the output cache shardings: without them the compiler emits
+        # unsharded (replicated) caches — tens of GB per device at 32k.
+        out_sds = jax.eval_shape(fn, params_sds, batch_sds)
+        logits_sh = batch_shardings(mesh, {"logits": out_sds[0]})["logits"]
+        c_sh = cache_shardings(mesh, out_sds[1], cfg)
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                         out_shardings=(logits_sh, c_sh))
+        lowered = jitted.lower(params_sds, batch_sds)
+        meta = {"mode": "prefill"}
+    else:   # decode
+        B = shape.global_batch
+        caches_sds = jax.eval_shape(
+            lambda: M.init_caches(cfg, B, shape.seq_len))
+        c_sh = cache_shardings(mesh, caches_sds, cfg)
+        tok_sds = M.input_specs(cfg, shape)["tokens"]
+        t_sh = batch_shardings(mesh, {"tokens": tok_sds})["tokens"]
+        pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos)
+        jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, t_sh, replicated(mesh)),
+                         out_shardings=(None, c_sh), donate_argnums=(1,))
+        lowered = jitted.lower(params_sds, caches_sds, tok_sds, pos_sds)
+        meta = {"mode": "decode"}
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             n_micro: int | None = None, remat: bool = True,
+             grad_rs: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    try:
+        lowered, meta = lower_cell(arch, shape_name, mesh, n_micro=n_micro,
+                                   remat=remat, grad_rs=grad_rs)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        txt = compiled.as_text()
+        st = hlo_analyze(txt, pod_boundary=256)
+        rec.update(meta)
+        rec.update({
+            "ok": True,
+            "lower_s": round(t1 - t0, 1),
+            "compile_s": round(t2 - t1, 1),
+            # xla cost_analysis (NOTE: counts loop bodies once — kept for
+            # reference only; the hlo_* fields are trip-count weighted)
+            "xla_flops_per_device": cost.get("flops", 0.0),
+            "xla_bytes_per_device": cost.get("bytes accessed", 0.0),
+            "hlo_matmul_flops_per_device": st.matmul_flops,
+            "hlo_hbm_bytes_per_device": st.hbm_bytes,
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes": (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                           + mem.temp_size_in_bytes - mem.alias_size_in_bytes),
+            "collective_result_bytes": st.collective_result_bytes,
+            "collective_counts": st.collective_counts,
+            "collective_wire_bytes_ici": st.collective_wire_bytes_ici,
+            "collective_wire_bytes_dcn": st.collective_wire_bytes_dcn,
+        })
+    except Exception as e:  # sharding mismatch / OOM at compile are bugs
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="comma list or 'all'")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--grad-rs", action="store_true",
+                    help="pin microbatch grads to the ZeRO sharding "
+                         "(reduce-scatter instead of all-reduce)")
+    args = ap.parse_args()
+
+    archs = arch_ids() if args.arch == "all" else args.arch.split(",")
+    meshes = args.mesh.split(",")
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        valid = cells(arch)
+        shapes = valid if args.shape == "all" else \
+            [s for s in args.shape.split(",") if s in valid]
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                path = os.path.join(
+                    args.out, f"{arch}__{shape_name}__{mesh_kind}.json")
+                if os.path.exists(path):
+                    print(f"skip (exists): {path}", flush=True)
+                    continue
+                print(f"=== {arch} x {shape_name} x {mesh_kind}", flush=True)
+                rec = run_cell(arch, shape_name, mesh_kind,
+                               n_micro=args.n_micro,
+                               remat=not args.no_remat,
+                               grad_rs=args.grad_rs)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = "OK" if rec.get("ok") else "FAIL"
+                print(f"    -> {status} lower={rec.get('lower_s')}s "
+                      f"compile={rec.get('compile_s')}s "
+                      f"flops/dev={rec.get('flops_per_device', 0):.3e} "
+                      f"peak={rec.get('peak_bytes', 0)/1e9:.2f}GB", flush=True)
+                if not rec.get("ok"):
+                    print(rec.get("error"), flush=True)
+
+
+if __name__ == "__main__":
+    main()

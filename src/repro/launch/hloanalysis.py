@@ -1,0 +1,315 @@
+"""Trip-count-aware analysis of compiled (post-SPMD) HLO text.
+
+XLA's built-in ``cost_analysis()`` counts every while-loop body ONCE, which
+makes it useless for scanned layer stacks (an 80-layer scan reports 1/80 of
+the FLOPs). This module re-derives per-device quantities from the compiled
+module text, weighting each computation by the product of enclosing loop
+trip counts (``backend_config={"known_trip_count":{"n":...}}``):
+
+  * matmul_flops  — 2 x numel(result) x contraction for every dot op;
+  * hbm_bytes     — per-instruction result+operand bytes at fusion
+                    granularity (fusion internals stay in VMEM/registers);
+  * collectives   — result bytes per collective kind, with wire-byte factors
+                    and an ICI/DCN split derived from the replica groups
+                    (a group that spans a pod boundary is DCN traffic).
+
+Everything is computed on the per-device partitioned module, matching the
+roofline convention "per chip".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import numpy as np
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+                "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY )?%?([\w.\-]+) \(")
+_INSTR = re.compile(r"^\s*(?:ROOT )?%?([\w.\-]+) = (.*)$")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_EXPLICIT = re.compile(r"replica_groups=\{\{([0-9,{} ]*)\}\}")
+_GROUPS_IOTA = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+# wire-bytes multiplier on the result size (ring algorithms, n>>1)
+WIRE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _result_of(body: str) -> str:
+    """The result-shape portion of an instruction body (before the op name)."""
+    # body looks like: "f32[512,512]{1,0} dot(%a, %b), ..." or tuple shapes
+    m = re.match(r"^((?:\([^)]*\)|[\w\[\],{}\/ ]+?)) ([a-z][\w\-]*)\(", body)
+    if not m:
+        return ""
+    return m.group(1)
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    result: str           # result shape text
+    operands: list[str]
+    body: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+    params: dict[str, str]       # param name -> shape text
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m and line.endswith("{"):
+                name = m.group(2)
+                # parse params from header: (a: f32[..], b: bf16[..])
+                params = {}
+                pm = re.search(r"\((.*)\) ->", line)
+                if pm:
+                    for part in pm.group(1).split(","):
+                        if ":" in part:
+                            pname, pshape = part.split(":", 1)
+                            params[pname.strip().lstrip("%")] = pshape.strip()
+                cur = Computation(name=name, instrs=[], params=params)
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, body = m.group(1), m.group(2)
+        opm = re.search(r"^(?:\([^)]*\)|[\w\[\],{}\/ ]+?) ([a-z][\w\-]*)\(",
+                        body)
+        op = opm.group(1) if opm else ""
+        # operand names: %refs inside the first (...) after the op name
+        operands = []
+        if opm:
+            after = body[opm.end():]
+            depth = 1
+            arg = ""
+            for ch in after:
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                arg += ch
+            operands = re.findall(r"%([\w.\-]+)", arg)
+        cur.instrs.append(Instr(name=name, op=op, result=_result_of(body),
+                                operands=operands, body=body))
+    return comps
+
+
+def _shape_of(comp: Computation, ref: str) -> str:
+    for ins in comp.instrs:
+        if ins.name == ref:
+            return ins.result
+    return comp.params.get(ref, "")
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    out_elems = 0
+    for dt, dims in _SHAPE_RE.findall(ins.result):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out_elems += n
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.body)
+    contract = 1
+    if m and ins.operands:
+        lhs_shape = _shape_of(comp, ins.operands[0])
+        sm = _SHAPE_RE.search(lhs_shape)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(dims):
+                    contract *= dims[int(idx)]
+    # batch dims are part of both result and lhs; contraction covers the rest
+    return 2.0 * out_elems * contract
+
+
+def _replica_group_crosses(body: str, boundary: int) -> bool:
+    """True if any replica group mixes devices from different pods
+    (device id // boundary differs)."""
+    m = _GROUPS_EXPLICIT.search(body)
+    if m:
+        groups = m.group(1).replace("{", " ").replace("}", " ").split()
+        try:
+            first = [int(x) for x in groups[0].split(",") if x]
+        except ValueError:
+            first = []
+        gs: list[list[int]] = []
+        for chunk in re.findall(r"[0-9][0-9, ]*", m.group(1)):
+            ids = [int(x) for x in chunk.replace(" ", "").split(",") if x]
+            if ids:
+                gs.append(ids)
+        return any(len({i // boundary for i in g}) > 1 for g in gs)
+    m = _GROUPS_IOTA.search(body)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        perm = [int(x) for x in m.group(4).split(",")] if m.group(4) \
+            else list(range(len(dims)))
+        ids = np.arange(int(np.prod(dims))).reshape(dims).transpose(perm) \
+            .reshape(g, s)
+        return bool(any(len({int(i) // boundary for i in row}) > 1
+                        for row in ids))
+    return False
+
+
+@dataclasses.dataclass
+class HLOStats:
+    matmul_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_result_bytes: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
+    collective_wire_bytes_ici: float = 0.0
+    collective_wire_bytes_dcn: float = 0.0
+    collective_counts: dict = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in COLLECTIVE_KINDS})
+
+    def add(self, other: "HLOStats", w: float) -> None:
+        self.matmul_flops += other.matmul_flops * w
+        self.hbm_bytes += other.hbm_bytes * w
+        for k in COLLECTIVE_KINDS:
+            self.collective_result_bytes[k] += \
+                other.collective_result_bytes[k] * w
+            self.collective_counts[k] += other.collective_counts[k] * w
+        self.collective_wire_bytes_ici += other.collective_wire_bytes_ici * w
+        self.collective_wire_bytes_dcn += other.collective_wire_bytes_dcn * w
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "iota"}
+
+
+def analyze(text: str, *, pod_boundary: int = 256) -> HLOStats:
+    comps = parse_hlo(text)
+    memo: dict[str, HLOStats] = {}
+
+    def comp_stats(name: str) -> HLOStats:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        st = HLOStats()
+        memo[name] = st
+        if comp is None:
+            return st
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "while":
+                trip = 1
+                tm = _TRIP.search(ins.body)
+                if tm:
+                    trip = int(tm.group(1))
+                bm = re.search(r"body=%?([\w.\-]+)", ins.body)
+                if bm:
+                    st.add(comp_stats(bm.group(1)), trip)
+                continue
+            if op in ("call", "fusion", "async-start"):
+                cm = _CALLS.search(ins.body)
+                if cm:
+                    sub = comp_stats(cm.group(1))
+                    st.matmul_flops += sub.matmul_flops
+                    # collectives inside fusions/calls still count
+                    st.add(dataclasses.replace(
+                        sub, matmul_flops=0.0, hbm_bytes=0.0), 1.0)
+                if op == "fusion":
+                    # fusion = one read of operands + one write of result
+                    b = _shape_bytes(ins.result)
+                    for ref in ins.operands:
+                        b += _shape_bytes(_shape_of(comp, ref))
+                    st.hbm_bytes += b
+                else:
+                    cm2 = _CALLS.search(ins.body)
+                    if cm2:
+                        st.hbm_bytes += comp_stats(cm2.group(1)).hbm_bytes
+                continue
+            if op == "conditional":
+                bm = _COND_BRANCHES.search(ins.body)
+                if bm:
+                    branches = [b.strip().lstrip("%")
+                                for b in bm.group(1).split(",")]
+                    subs = [comp_stats(b) for b in branches if b in comps]
+                    if subs:
+                        worst = max(subs, key=lambda s: s.matmul_flops
+                                    + s.hbm_bytes)
+                        st.add(worst, 1.0)
+                continue
+            if op == "dot":
+                st.matmul_flops += _dot_flops(comp, ins)
+            base = op.replace("-start", "")
+            if base in COLLECTIVE_KINDS:
+                b = _shape_bytes(ins.result)
+                st.collective_result_bytes[base] += b
+                st.collective_counts[base] += 1
+                wire = b * WIRE_FACTOR[base]
+                if _replica_group_crosses(ins.body, pod_boundary):
+                    st.collective_wire_bytes_dcn += wire
+                else:
+                    st.collective_wire_bytes_ici += wire
+            if op in _SKIP_BYTES_OPS or op.endswith("-done"):
+                continue
+            if op == "dynamic-update-slice":
+                # in-place slice write: read+write the update, not the
+                # whole buffer (KV-cache updates would otherwise count the
+                # entire cache per decode step)
+                upd = _shape_of(comp, ins.operands[1]) if len(ins.operands) > 1 \
+                    else ins.result
+                st.hbm_bytes += 2 * _shape_bytes(upd)
+                continue
+            if op == "dynamic-slice":
+                st.hbm_bytes += 2 * _shape_bytes(ins.result)
+                continue
+            b = _shape_bytes(ins.result)
+            for ref in ins.operands:
+                b += _shape_bytes(_shape_of(comp, ref))
+            st.hbm_bytes += b
+        return st
+
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line)
+            if m:
+                entry = m.group(2)
+            break
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    return comp_stats(entry)

@@ -1,0 +1,133 @@
+"""Roofline analysis from the dry-run records (single-pod table).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (and a DCN-class cross-pod path reported separately for multi-pod
+records). Terms, all per-device (= per-chip; the partitioned module is what
+the dry-run analyzed):
+
+  compute    = hlo_matmul_flops / PEAK_FLOPS
+  memory     = hlo_hbm_bytes   / HBM_BW
+  collective = wire_ici / ICI_BW  (+ wire_dcn / DCN_BW on the pod axis)
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per device, with
+backward (3x fwd) and the per-group remat recompute (1x fwd on scanned
+layers) as the *useful* training arithmetic convention. The ratio
+MODEL_FLOPS / hlo_matmul_flops exposes replication/recompute waste.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs.base import SHAPES, get_config
+from repro.models.model import count_params_analytic
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 3.125e9
+HBM_BYTES = 16e9
+CHIPS = {"single": 256, "multi": 512}
+
+
+def model_flops_per_device(arch: str, shape_name: str, mesh: str,
+                           mode: str) -> float:
+    """Useful arithmetic per device per step (6ND convention)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = count_params_analytic(cfg, active_only=True)
+    # exclude the embedding table from N (standard 6ND convention), keep head
+    n_active -= cfg.vocab * cfg.d_model
+    if mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.enc_dec:
+            tokens = shape.global_batch * (shape.seq_len +
+                                           shape.seq_len // 8) // 2
+        flops = 6 * n_active * tokens          # fwd(2) + bwd(4)
+        flops += 2 * n_active * tokens         # full remat: one extra fwd
+    elif mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        flops = 2 * n_active * tokens
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        flops = 2 * n_active * tokens
+    return flops / CHIPS[mesh]
+
+
+def load_records(results_dir: str) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_row(rec: dict) -> dict:
+    arch, shape, mesh = rec["arch"], rec["shape"], rec["mesh"]
+    compute = rec["hlo_matmul_flops_per_device"] / PEAK_FLOPS
+    memory = rec["hlo_hbm_bytes_per_device"] / HBM_BW
+    ici = rec["collective_wire_bytes_ici"] / ICI_BW
+    dcn = rec["collective_wire_bytes_dcn"] / DCN_BW
+    coll = ici + dcn
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    useful = model_flops_per_device(arch, shape, mesh, rec.get("mode", "train"))
+    step = max(terms.values())
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh, "mode": rec.get("mode"),
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "collective_ici_s": ici, "collective_dcn_s": dcn,
+        "dominant": dominant,
+        "model_flops_per_dev": useful,
+        "hlo_flops_per_dev": rec["hlo_matmul_flops_per_device"],
+        "useful_ratio": useful / max(rec["hlo_matmul_flops_per_device"], 1.0),
+        "peak_gb": rec["peak_bytes"] / 1e9,
+        "fits_hbm": rec["peak_bytes"] <= HBM_BYTES,
+        # roofline fraction: useful flops time over the actual bound
+        "roofline_fraction": (useful / PEAK_FLOPS) / step if step else 0.0,
+    }
+
+
+def build_table(results_dir: str, mesh: str = "single") -> list[dict]:
+    rows = []
+    for rec in load_records(results_dir):
+        if not rec.get("ok") or rec["mesh"] != mesh:
+            continue
+        rows.append(roofline_row(rec))
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def fmt_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'md':3s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'coll_s':>10s} {'dom':>10s} {'useful%':>8s} "
+           f"{'roofl%':>7s} {'peakGB':>7s} {'fits':>5s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mode'][:3]:3s} "
+            f"{r['compute_s']:10.4f} {r['memory_s']:10.4f} "
+            f"{r['collective_s']:10.4f} {r['dominant']:>10s} "
+            f"{100*r['useful_ratio']:8.1f} {100*r['roofline_fraction']:7.1f} "
+            f"{r['peak_gb']:7.2f} {str(r['fits_hbm'])[:5]:>5s}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json-out", default="results/roofline.json")
+    args = ap.parse_args()
+    rows = build_table(args.results, args.mesh)
+    print(fmt_table(rows))
+    with open(args.json_out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\nwrote {args.json_out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Simulation CLI: run any (scheduler x strategy) on the paper's grid.
+
+  PYTHONPATH=src python -m repro.launch.simulate --strategy hrs bhr lru \
+      --jobs 500 --wan-mbps 10
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.core import SCHEDULERS, STRATEGIES, GridConfig, run_experiment
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--strategy", nargs="+", default=["hrs", "bhr", "lru"],
+                    choices=list(STRATEGIES))
+    ap.add_argument("--scheduler", default="dataaware",
+                    choices=list(SCHEDULERS))
+    ap.add_argument("--jobs", type=int, default=500)
+    ap.add_argument("--wan-mbps", type=float, default=10.0)
+    ap.add_argument("--lan-mbps", type=float, default=1000.0)
+    ap.add_argument("--regions", type=int, default=4)
+    ap.add_argument("--sites", type=int, default=13)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--failures", type=int, default=0,
+                    help="number of random site failures to inject")
+    args = ap.parse_args()
+
+    cfg = GridConfig(n_regions=args.regions, sites_per_region=args.sites,
+                     wan_bandwidth=args.wan_mbps * 1e6 / 8,
+                     lan_bandwidth=args.lan_mbps * 1e6 / 8,
+                     n_jobs=args.jobs, seed=args.seed)
+    failures = [(3 + 7 * i, 2000.0 * (i + 1), 4000.0)
+                for i in range(args.failures)]
+    print(f"{'strategy':>14} {'avg_job_time':>13} {'inter/job':>10} "
+          f"{'WAN GB':>8} {'makespan':>10}")
+    for strat in args.strategy:
+        r = run_experiment(cfg, scheduler=args.scheduler, strategy=strat,
+                           n_jobs=args.jobs, failures=failures or None)
+        print(f"{strat:>14} {r.avg_job_time:>12.0f}s {r.avg_inter_comms:>10.2f} "
+              f"{r.total_wan_gb:>8.1f} {r.makespan:>9.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Training launcher: ``--arch <id>`` selects any assigned architecture.
+
+Real runs use the production mesh; on this CPU container use
+``--reduced`` (smoke-scale model, 1 device) — the full configs are
+exercised by launch/dryrun.py.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --reduced \
+      --steps 50
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import arch_ids, get_config
+from repro.core import GridTopology
+from repro.data.pipeline import (DataConfig, GridDataLoader,
+                                 SyntheticShardedDataset)
+from repro.fault.failures import FailurePlan, TrainingSupervisor
+from repro.grid.datagrid import DataGridService
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import (TrainConfig, init_train_state,
+                                    make_train_step)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=arch_ids())
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"arch={cfg.name} layers={cfg.n_layers} d={cfg.d_model} "
+          f"vocab={cfg.vocab} reduced={args.reduced}")
+
+    topo = GridTopology(2, 4, lan_bandwidth=50e9, wan_bandwidth=3.125e9,
+                        storage_capacity=256e9)
+    grid = DataGridService(topo)
+    ds = SyntheticShardedDataset(DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+        n_shards=16))
+    loader = GridDataLoader(ds, grid)
+    tcfg = TrainConfig(
+        n_microbatches=args.microbatches,
+        opt=OptimizerConfig(peak_lr=3e-4, warmup_steps=10,
+                            total_steps=args.steps,
+                            compress_grads=args.compress_grads))
+    params, opt = init_train_state(cfg, jax.random.PRNGKey(0))
+    jstep = jax.jit(make_train_step(cfg, tcfg))
+
+    def step_fn(state, i):
+        p, o = state
+        if cfg.enc_dec or cfg.vision_tokens:
+            batch, _ = loader.next_batch()
+            tok = jnp.asarray(batch["tokens"])
+            b = {"tokens": tok[:, : args.seq // 8] if cfg.enc_dec else tok,
+                 "labels": jnp.asarray(batch["labels"])[:, : args.seq // 8]
+                 if cfg.enc_dec else jnp.asarray(batch["labels"])}
+            if cfg.enc_dec:
+                b["frames"] = jnp.ones((args.batch, args.seq, cfg.d_model),
+                                       jnp.bfloat16)
+            if cfg.vision_tokens:
+                b["vision_embeds"] = jnp.ones(
+                    (args.batch, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+        else:
+            batch, _ = loader.next_batch()
+            b = {k: jnp.asarray(v) for k, v in batch.items()}
+        p, o, m = jstep(p, o, b)
+        return (p, o), {"loss": m["loss"]}
+
+    sup = TrainingSupervisor(step_fn, args.ckpt_dir,
+                             ckpt_every=args.ckpt_every)
+    state, hist = sup.run((params, opt), args.steps)
+    for h in hist[:: max(1, len(hist) // 8)]:
+        print(f"step {h['step']:4d} loss {h['loss']:.4f}")
+    print(f"done. final loss {hist[-1]['loss']:.4f}; "
+          f"grid inter-pod={grid.inter_comm_count()}")
+
+
+if __name__ == "__main__":
+    main()

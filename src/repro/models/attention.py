@@ -1,0 +1,178 @@
+"""GQA attention: reference, blockwise (flash-style jnp), and decode paths.
+
+``attention_blockwise`` is the model default for training/prefill: an online
+softmax over KV chunks inside a ``lax.scan``, so peak memory is
+O(q_chunk x kv_chunk) rather than O(S^2) — required for the 32k prefill
+dry-runs (a full 32k x 32k score tensor would not fit any HBM). On real TPU
+the Pallas flash kernel (repro.kernels.flash_attention) replaces it; both
+match ``attention_reference`` which is the oracle in tests.
+
+All functions take q: (B, Sq, H, hd) and k, v: (B, Skv, KV, hd) with
+H = G * KV (grouped-query attention), and support:
+  * causal masking with a query position offset (prefill/decode),
+  * sliding-window locality (gemma local layers),
+  * logit soft-capping (gemma2),
+  * non-causal (whisper encoder / cross attention).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .common import softcap as _softcap
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: int | None, kv_len=None):
+    """(..., Sq, Skv) boolean mask of *allowed* positions."""
+    m = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    if kv_len is not None:
+        m &= k_pos[None, :] < kv_len
+    return m
+
+
+def attention_reference(q, k, v, *, causal=True, window=None, softcap=None,
+                        q_offset=0, kv_len=None):
+    """Materialized-scores oracle. Only for small shapes/tests."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        scores = _softcap(scores, softcap)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(k.shape[1])
+    mask = _mask(q_pos, k_pos, causal=causal, window=window, kv_len=kv_len)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attention_blockwise(q, k, v, *, causal=True, window=None, softcap=None,
+                        q_offset=0, kv_len=None,
+                        q_chunk=1024, kv_chunk=1024):
+    """Flash-style online-softmax attention in pure jnp.
+
+    Scans over KV chunks per Q chunk, carrying (running max, running sum,
+    running output). Equivalent to attention_reference to within bf16/f32
+    rounding; memory is O(q_chunk*kv_chunk) per step.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    # pad S to chunk multiples
+    pq = (-Sq) % q_chunk
+    pk = (-Skv) % kv_chunk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    Sqp, Skvp = Sq + pq, Skv + pk
+    nq, nk = Sqp // q_chunk, Skvp // kv_chunk
+    scale = hd ** -0.5
+    # effective kv length: padded keys are invalid
+    eff_kv = jnp.minimum(jnp.asarray(Skv), kv_len) if kv_len is not None else Skv
+
+    qg = q.reshape(B, nq, q_chunk, KV, G, hd)
+    kg = k.reshape(B, nk, kv_chunk, KV, hd)
+    vg = v.reshape(B, nk, kv_chunk, KV, hd)
+
+    # band-limited iteration for sliding-window layers: a q chunk at block
+    # qi only attends to kv blocks in [qi*qc - window - kc, (qi+1)*qc), so
+    # the kv scan runs over a fixed-size band gathered with dynamic slices
+    # instead of the full sequence — S/(window+qc) x fewer score tiles
+    # (8x for gemma3's 512-token window at 4k).
+    band = None
+    if window is not None and causal:
+        band = min(nk, (q_chunk + window) // kv_chunk + 2)
+
+    def per_batch(qb, kb, vb):
+        # qb: (nq, qc, KV, G, hd); kb, vb: (nk, kc, KV, hd)
+        def q_block(args):
+            qi, qc = args
+            q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+            if band is not None:
+                last = ((qi + 1) * q_chunk - 1) // kv_chunk
+                start = jnp.clip(last - band + 1, 0, nk - band)
+            else:
+                start = 0
+
+            def kv_step(carry, j):
+                m_run, l_run, acc = carry
+                ki = start + j
+                kc = jax.lax.dynamic_index_in_dim(kb, ki, keepdims=False)
+                vc = jax.lax.dynamic_index_in_dim(vb, ki, keepdims=False)
+                k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+                s = jnp.einsum("qkgd,skd->kgqs", qc.astype(jnp.float32),
+                               kc.astype(jnp.float32)) * scale
+                if softcap is not None:
+                    s = _softcap(s, softcap)
+                mask = _mask(q_pos, k_pos, causal=causal, window=window,
+                             kv_len=eff_kv)
+                s = jnp.where(mask[None, None], s, NEG_INF)
+                m_new = jnp.maximum(m_run, s.max(axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m_run - m_new)
+                l_new = l_run * corr + p.sum(axis=-1)
+                acc = acc * corr[..., None] + jnp.einsum(
+                    "kgqs,skd->kgqd", p, vc.astype(jnp.float32))
+                return (m_new, l_new, acc), None
+
+            m0 = jnp.full((KV, G, q_chunk), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((KV, G, q_chunk), jnp.float32)
+            a0 = jnp.zeros((KV, G, q_chunk, hd), jnp.float32)
+            # checkpoint each KV block: without it, AD saves every block's
+            # (qc x kc) score tensor for the backward pass — O(S^2) memory,
+            # exactly what blockwise attention exists to avoid.
+            n_steps = band if band is not None else nk
+            (m, l, acc), _ = jax.lax.scan(
+                jax.checkpoint(kv_step), (m0, l0, a0), jnp.arange(n_steps))
+            out = acc / jnp.maximum(l, 1e-30)[..., None]
+            return out.transpose(2, 0, 1, 3)        # (q_chunk, KV, G, hd)
+
+        out = jax.lax.map(q_block, (jnp.arange(nq), qb))
+        return out.reshape(Sqp, KV, G, hd)
+
+    out = jax.vmap(per_batch)(qg, kg, vg)
+    out = out[:, :Sq].reshape(B, Sq, H, hd).astype(q.dtype)
+    return out
+
+
+def attention_decode(q, k_cache, v_cache, *, cache_len, window=None,
+                     softcap=None):
+    """One-token decode: q (B, 1, H, hd) against caches (B, S, KV, hd).
+
+    ``cache_len`` is the number of valid cache entries; the new token's
+    position is cache_len (its own K/V must already be written at that slot
+    by the caller). Linear in S; no blocking needed.
+    """
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = _softcap(s, softcap)
+    k_pos = jnp.arange(k_cache.shape[1])
+    valid = k_pos[None] <= cache_len                   # includes current token
+    if window is not None:
+        valid &= k_pos[None] > cache_len - window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)

@@ -1,0 +1,81 @@
+"""Shared layers: norms, RoPE, activations, initializers.
+
+Dtype policy: parameters and activations in bf16; norms, softmax, RoPE and
+the loss in f32 (standard TPU mixed-precision discipline).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Param = jnp.ndarray
+
+
+def rms_norm(x: jnp.ndarray, weight: Param, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def layer_norm(x: jnp.ndarray, weight: Param, bias: Param,
+               eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = out * weight.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    dtype = x.dtype
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freq            # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]                                 # (B,S,1,half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x = x.astype(jnp.float32)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+def silu(x: jnp.ndarray) -> jnp.ndarray:
+    return x * jax.nn.sigmoid(x)
+
+
+ACTS = {"swiglu": silu, "geglu": jax.nn.gelu, "gelu": jax.nn.gelu}
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    return cap * jnp.tanh(x / cap)
+
+
+# -- initializers -----------------------------------------------------------
+
+def normal_init(key, shape, scale: float = 0.02, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.bfloat16):
+    return jnp.zeros(shape, dtype)
+
+
+class KeyGen:
+    """Sequential PRNG key dispenser for bulk param init."""
+
+    def __init__(self, key: jax.Array) -> None:
+        self._key = key
+
+    def __call__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub

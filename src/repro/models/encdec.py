@@ -1,0 +1,195 @@
+"""Whisper-style encoder-decoder backbone (audio arch).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, S_enc, D); the encoder is the transformer
+stack over those frames (non-causal MHA), the decoder is causal self-attn +
+cross-attn. LayerNorm + GELU + biases, per the published architecture.
+
+Shape convention (DESIGN.md §5): for a cell with ``seq_len`` S, the encoder
+sees S frames and the decoder S // 8 tokens; decode cells decode one token
+against a decoder self-KV of S // 8 and cross-KV of S.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import shardctx
+from .attention import attention_blockwise, attention_decode
+from .common import KeyGen, layer_norm, normal_init
+from .mlp import gelu_mlp, init_gelu_mlp
+
+DEC_RATIO = 8   # decoder length = seq_len // DEC_RATIO
+
+
+def _init_ln(kg, D):
+    return {"w": jnp.ones((D,), jnp.float32), "b": jnp.zeros((D,), jnp.float32)}
+
+
+def _init_mha(kg: KeyGen, cfg: ArchConfig):
+    D = cfg.d_model
+    hd = cfg.resolved_head_dim()
+    H = cfg.n_heads
+    return {
+        "wq": normal_init(kg(), (D, H * hd)), "bq": jnp.zeros((H * hd,), jnp.bfloat16),
+        "wk": normal_init(kg(), (D, H * hd)),
+        "wv": normal_init(kg(), (D, H * hd)), "bv": jnp.zeros((H * hd,), jnp.bfloat16),
+        "wo": normal_init(kg(), (H * hd, D)), "bo": jnp.zeros((D,), jnp.bfloat16),
+    }
+
+
+def _mha_qkv(cfg, p, xq, xkv):
+    B, Sq, _ = xq.shape
+    Skv = xkv.shape[1]
+    hd = cfg.resolved_head_dim()
+    H = cfg.n_heads
+    q = (xq @ p["wq"] + p["bq"]).reshape(B, Sq, H, hd)
+    k = (xkv @ p["wk"]).reshape(B, Skv, H, hd)
+    v = (xkv @ p["wv"] + p["bv"]).reshape(B, Skv, H, hd)
+    return q, k, v
+
+
+def _init_enc_block(kg: KeyGen, cfg: ArchConfig):
+    return {"ln1": _init_ln(kg, cfg.d_model), "attn": _init_mha(kg, cfg),
+            "ln2": _init_ln(kg, cfg.d_model),
+            "mlp": init_gelu_mlp(kg, cfg.d_model, cfg.d_ff)}
+
+
+def _init_dec_block(kg: KeyGen, cfg: ArchConfig):
+    return {"ln1": _init_ln(kg, cfg.d_model), "self_attn": _init_mha(kg, cfg),
+            "ln2": _init_ln(kg, cfg.d_model), "cross_attn": _init_mha(kg, cfg),
+            "ln3": _init_ln(kg, cfg.d_model),
+            "mlp": init_gelu_mlp(kg, cfg.d_model, cfg.d_ff)}
+
+
+def init_encdec_params(cfg: ArchConfig, key, *, max_enc: int, max_dec: int):
+    kg = KeyGen(key)
+
+    def stack(init_fn, n):
+        blocks = [init_fn(kg, cfg) for _ in range(n)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+    return {
+        "enc_pos": normal_init(kg(), (max_enc, cfg.d_model)),
+        "enc_blocks": stack(_init_enc_block, cfg.n_encoder_layers),
+        "enc_norm": _init_ln(kg, cfg.d_model),
+        "embed": normal_init(kg(), (cfg.vocab, cfg.d_model)),
+        "dec_pos": normal_init(kg(), (max_dec, cfg.d_model)),
+        "dec_blocks": stack(_init_dec_block, cfg.n_layers),
+        "dec_norm": _init_ln(kg, cfg.d_model),
+    }
+
+
+def _ln(p, x):
+    return layer_norm(x, p["w"], p["b"])
+
+
+def encode(cfg: ArchConfig, params, frames, remat: bool = False):
+    """frames: (B, S_enc, D) precomputed frame embeddings (stub frontend)."""
+    S = frames.shape[1]
+    x = shardctx.anchor_batch(frames + params["enc_pos"][None, :S])
+
+    def body(x, bp):
+        h = _ln(bp["ln1"], x)
+        q, k, v = _mha_qkv(cfg, bp["attn"], h, h)
+        o = attention_blockwise(q, k, v, causal=False)
+        x = x + o.reshape(*x.shape[:2], -1) @ bp["attn"]["wo"] + bp["attn"]["bo"]
+        x = x + gelu_mlp(bp["mlp"], _ln(bp["ln2"], x))
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return _ln(params["enc_norm"], x)
+
+
+def decode_train(cfg: ArchConfig, params, enc_out, tokens, remat: bool = False):
+    """Teacher-forced decoder forward. tokens: (B, S_dec). Returns hidden."""
+    S = tokens.shape[1]
+    x = shardctx.anchor_batch(
+        jnp.take(params["embed"], tokens, axis=0) + params["dec_pos"][None, :S])
+
+    def body(x, bp):
+        h = _ln(bp["ln1"], x)
+        q, k, v = _mha_qkv(cfg, bp["self_attn"], h, h)
+        o = attention_blockwise(q, k, v, causal=True)
+        x = x + o.reshape(*x.shape[:2], -1) @ bp["self_attn"]["wo"] \
+            + bp["self_attn"]["bo"]
+        h = _ln(bp["ln2"], x)
+        q, k, v = _mha_qkv(cfg, bp["cross_attn"], h, enc_out)
+        o = attention_blockwise(q, k, v, causal=False)
+        x = x + o.reshape(*x.shape[:2], -1) @ bp["cross_attn"]["wo"] \
+            + bp["cross_attn"]["bo"]
+        x = x + gelu_mlp(bp["mlp"], _ln(bp["ln3"], x))
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    return _ln(params["dec_norm"], x)
+
+
+def init_decoder_caches(cfg: ArchConfig, batch: int, max_dec: int, max_enc: int):
+    hd = cfg.resolved_head_dim()
+    H = cfg.n_heads
+    L = cfg.n_layers
+    return {
+        "self_k": jnp.zeros((L, batch, max_dec, H, hd), jnp.bfloat16),
+        "self_v": jnp.zeros((L, batch, max_dec, H, hd), jnp.bfloat16),
+        "cross_k": jnp.zeros((L, batch, max_enc, H, hd), jnp.bfloat16),
+        "cross_v": jnp.zeros((L, batch, max_enc, H, hd), jnp.bfloat16),
+    }
+
+
+def precompute_cross_caches(cfg: ArchConfig, params, enc_out):
+    """Cross K/V per decoder layer from encoder output (once per request)."""
+    B, S, _ = enc_out.shape
+    hd = cfg.resolved_head_dim()
+    H = cfg.n_heads
+
+    def body(_, bp):
+        k = (enc_out @ bp["cross_attn"]["wk"]).reshape(B, S, H, hd)
+        v = (enc_out @ bp["cross_attn"]["wv"] + bp["cross_attn"]["bv"]) \
+            .reshape(B, S, H, hd)
+        return None, (k, v)
+
+    _, (ks, vs) = jax.lax.scan(body, None, params["dec_blocks"])
+    return ks.astype(jnp.bfloat16), vs.astype(jnp.bfloat16)
+
+
+def decode_step(cfg: ArchConfig, params, caches, token, pos):
+    """One decoder token. token: (B, 1) int32; pos: scalar int32."""
+    B = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0) \
+        + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1)[None]
+    hd = cfg.resolved_head_dim()
+    H = cfg.n_heads
+
+    def body(x, xs):
+        bp, sk, sv, ck, cv = xs
+        h = _ln(bp["ln1"], x)
+        q = (h @ bp["self_attn"]["wq"] + bp["self_attn"]["bq"]).reshape(B, 1, H, hd)
+        k = (h @ bp["self_attn"]["wk"]).reshape(B, 1, H, hd)
+        v = (h @ bp["self_attn"]["wv"] + bp["self_attn"]["bv"]).reshape(B, 1, H, hd)
+        sk = jax.lax.dynamic_update_slice_in_dim(sk, k.astype(sk.dtype), pos, axis=1)
+        sv = jax.lax.dynamic_update_slice_in_dim(sv, v.astype(sv.dtype), pos, axis=1)
+        o = attention_decode(q, sk, sv, cache_len=pos)
+        x = x + o.reshape(B, 1, -1) @ bp["self_attn"]["wo"] + bp["self_attn"]["bo"]
+        h = _ln(bp["ln2"], x)
+        q = (h @ bp["cross_attn"]["wq"] + bp["cross_attn"]["bq"]).reshape(B, 1, H, hd)
+        o = attention_decode(q, ck, cv, cache_len=ck.shape[1] - 1)
+        x = x + o.reshape(B, 1, -1) @ bp["cross_attn"]["wo"] + bp["cross_attn"]["bo"]
+        x = x + gelu_mlp(bp["mlp"], _ln(bp["ln3"], x))
+        return x, (sk, sv)
+
+    x, (new_sk, new_sv) = jax.lax.scan(
+        body, x, (params["dec_blocks"], caches["self_k"], caches["self_v"],
+                  caches["cross_k"], caches["cross_v"]))
+    x = _ln(params["dec_norm"], x)
+    logits = x @ params["embed"].T
+    new_caches = dict(caches, self_k=new_sk, self_v=new_sv)
+    return logits, new_caches

@@ -1,0 +1,261 @@
+"""State-space blocks: Mamba1 (selective scan) and Mamba2 (SSD), plus their
+single-token decode steps.
+
+TPU adaptation (see DESIGN.md §6): the CUDA selective-scan kernel is a
+warp-parallel recurrence; on TPU we use
+  * mamba1: chunked associative scan — ``lax.scan`` over sequence chunks
+    (HBM-resident carry) with ``associative_scan`` inside the chunk
+    (VMEM-sized working set, VPU-friendly elementwise ops);
+  * mamba2: the SSD chunked matmul formulation, which maps the recurrence
+    onto MXU matmuls (intra-chunk "attention" + inter-chunk state carry).
+
+Both have exact sequential references in kernels/selective_scan/ref.py; the
+Pallas kernel accelerates the mamba1 inner chunk on real TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import KeyGen, normal_init, rms_norm, silu
+
+
+# --------------------------------------------------------------------------
+# shared helpers
+# --------------------------------------------------------------------------
+
+def causal_conv1d(x, weight, bias, state=None):
+    """Depthwise causal conv. x: (B, S, C), weight: (C, K), bias: (C,).
+
+    If ``state`` (B, K-1, C) is given (decode), it is prepended and the new
+    state returned; else zero left-padding (train/prefill).
+    """
+    K = weight.shape[1]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(K):                      # K is 4: unrolled shifts
+        out = out + xp[:, i : i + x.shape[1], :] * weight[:, i][None, None, :]
+    out = out + bias[None, None, :]
+    new_state = xp[:, -(K - 1):, :] if K > 1 else jnp.zeros_like(x[:, :0])
+    return out, new_state
+
+
+# --------------------------------------------------------------------------
+# Mamba1 (falcon-mamba)
+# --------------------------------------------------------------------------
+
+def init_mamba1(kg: KeyGen, d_model: int, ssm, dtype=jnp.bfloat16):
+    di = ssm.d_inner(d_model)
+    dtr = ssm.resolved_dt_rank(d_model)
+    N = ssm.state_dim
+    K = ssm.conv_kernel
+    return {
+        "in_proj": normal_init(kg(), (d_model, 2 * di), dtype=dtype),
+        "conv_w": normal_init(kg(), (di, K), scale=0.1, dtype=jnp.float32),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": normal_init(kg(), (di, dtr + 2 * N), dtype=dtype),
+        "dt_proj": normal_init(kg(), (dtr, di), scale=dtr ** -0.5, dtype=jnp.float32),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),   # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32), (di, 1))),
+        "D_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": normal_init(kg(), (di, d_model), dtype=dtype),
+    }
+
+
+def _selective_scan_chunked(dt, xf, B_ssm, C_ssm, A, h0, chunk: int):
+    """Fused chunked selective scan + output projection.
+
+    dt, xf: (B, S, Di) f32; B_ssm, C_ssm: (B, S, N) f32; A: (Di, N);
+    h0: (B, Di, N). Returns (y (B, S, Di), h_last).
+
+    The (B, S, Di, N) decay/input tensors are never materialized for the
+    full sequence — each lax.scan step builds them for one chunk in VMEM-
+    sized working set, runs the associative scan, and immediately contracts
+    with C to the (B, chunk, Di) output. This is the memory shape the
+    Pallas kernel (kernels/selective_scan) implements natively on TPU.
+    """
+    B, S, Di = xf.shape
+    N = A.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0)))
+        B_ssm = jnp.pad(B_ssm, ((0, 0), (0, pad), (0, 0)))
+        C_ssm = jnp.pad(C_ssm, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // chunk
+    swap = lambda t: t.reshape(B, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+    dtc, xfc, bc, cc = swap(dt), swap(xf), swap(B_ssm), swap(C_ssm)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, ar * bl + br
+
+    def chunk_step(h, xs):
+        dtk, xk, bk, ck = xs                        # (B, chunk, ...)
+        a_k = jnp.exp(dtk[..., None] * A[None, None])        # (B,c,Di,N)
+        b_k = (dtk * xk)[..., None] * bk[:, :, None, :]      # (B,c,Di,N)
+        aprod, bsum = jax.lax.associative_scan(combine, (a_k, b_k), axis=1)
+        h_all = aprod * h[:, None] + bsum
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, ck)
+        return h_all[:, -1], y
+
+    h_last, y_chunks = jax.lax.scan(chunk_step, h0, (dtc, xfc, bc, cc))
+    y = y_chunks.swapaxes(0, 1).reshape(B, nc * chunk, Di)[:, :S]
+    return y, h_last
+
+
+def mamba1_forward(params, x, ssm, *, chunk: int = 256, state=None):
+    """x: (B, S, D). state: optional (conv_state, ssm_state) for streaming.
+    Returns (y, new_state)."""
+    B, S, D = x.shape
+    N = ssm.state_dim
+    dtr = ssm.resolved_dt_rank(D)
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)              # (B, S, Di)
+    conv_state = None if state is None else state[0]
+    xc, new_conv = causal_conv1d(xin, params["conv_w"], params["conv_b"],
+                                 state=conv_state)
+    xc = silu(xc)
+    proj = xc @ params["x_proj"]
+    dt_raw = proj[..., :dtr]
+    B_ssm = proj[..., dtr:dtr + N].astype(jnp.float32)          # (B,S,N)
+    C_ssm = proj[..., dtr + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) @ params["dt_proj"] + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                                # (Di, N)
+    xf = xc.astype(jnp.float32)
+    h0 = (jnp.zeros((B, xc.shape[-1], N), jnp.float32)
+          if state is None else state[1])
+    y, h_last = _selective_scan_chunked(dt, xf, B_ssm, C_ssm, A, h0, chunk)
+    y = y + params["D_skip"][None, None] * xf
+    y = (y.astype(x.dtype) * silu(z)) @ params["out_proj"]
+    return y, (new_conv, h_last)
+
+
+def mamba1_decode(params, x, state, ssm):
+    """One token: x (B, 1, D); state = (conv_state (B,K-1,Di), h (B,Di,N))."""
+    y, new_state = mamba1_forward(params, x, ssm, chunk=1, state=state)
+    return y, new_state
+
+
+# --------------------------------------------------------------------------
+# Mamba2 / SSD (zamba2)
+# --------------------------------------------------------------------------
+
+def init_mamba2(kg: KeyGen, d_model: int, ssm, dtype=jnp.bfloat16):
+    """Projections are stored *separately* (z, x, B, C, dt) rather than as
+    one packed in_proj: the packed layout's split points do not align with
+    tensor-parallel shard boundaries, while separate matrices shard cleanly
+    (x and z head-aligned over the model axis; B/C/dt small). Depthwise
+    convs factor the same way (mathematically identical)."""
+    di = ssm.d_inner(d_model)
+    N = ssm.state_dim
+    nh = di // ssm.head_dim
+    K = ssm.conv_kernel
+    return {
+        "in_z": normal_init(kg(), (d_model, di), dtype=dtype),
+        "in_x": normal_init(kg(), (d_model, di), dtype=dtype),
+        "in_B": normal_init(kg(), (d_model, N), dtype=dtype),
+        "in_C": normal_init(kg(), (d_model, N), dtype=dtype),
+        "in_dt": normal_init(kg(), (d_model, nh), dtype=dtype),
+        "conv_x_w": normal_init(kg(), (di, K), scale=0.1, dtype=jnp.float32),
+        "conv_x_b": jnp.zeros((di,), jnp.float32),
+        "conv_B_w": normal_init(kg(), (N, K), scale=0.1, dtype=jnp.float32),
+        "conv_B_b": jnp.zeros((N,), jnp.float32),
+        "conv_C_w": normal_init(kg(), (N, K), scale=0.1, dtype=jnp.float32),
+        "conv_C_b": jnp.zeros((N,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.zeros((di,), jnp.float32),
+        "out_proj": normal_init(kg(), (di, d_model), dtype=dtype),
+    }
+
+
+def mamba2_forward(params, x, ssm, *, chunk: int = 256, state=None):
+    """SSD chunked forward. x: (B, S, D) -> (y, (conv_states, ssm_state)).
+
+    ssm_state: (B, nh, P, N). Single group (G=1) B/C shared across heads.
+    conv_states: dict {x, B, C} of (B, K-1, dim).
+    """
+    Bsz, S, D = x.shape
+    di = ssm.d_inner(D)
+    N = ssm.state_dim
+    P = ssm.head_dim
+    nh = di // P
+    chunk = min(chunk, S)
+
+    z = x @ params["in_z"]
+    xr = x @ params["in_x"]
+    br = x @ params["in_B"]
+    cr = x @ params["in_C"]
+    dt_raw = x @ params["in_dt"]
+    cs = state[0] if state is not None else {"x": None, "B": None, "C": None}
+    xc, ncx = causal_conv1d(xr, params["conv_x_w"], params["conv_x_b"],
+                            state=cs["x"])
+    bc, ncb = causal_conv1d(br, params["conv_B_w"], params["conv_B_b"],
+                            state=cs["B"])
+    cc, ncc = causal_conv1d(cr, params["conv_C_w"], params["conv_C_b"],
+                            state=cs["C"])
+    new_conv = {"x": ncx, "B": ncb, "C": ncc}
+    xs = silu(xc).reshape(Bsz, S, nh, P).astype(jnp.float32)
+    B_ssm = silu(bc).astype(jnp.float32)                         # (B,S,N)
+    C_ssm = silu(cc).astype(jnp.float32)                         # (B,S,N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                                 # (nh,)
+
+    pad = (-S) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B_ssm = jnp.pad(B_ssm, ((0, 0), (0, pad), (0, 0)))
+        C_ssm = jnp.pad(C_ssm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+    # chunked views, scan axis first: (nc, B, L, ...)
+    xs_c = xs.reshape(Bsz, nc, chunk, nh, P).swapaxes(0, 1)
+    b_c = B_ssm.reshape(Bsz, nc, chunk, N).swapaxes(0, 1)
+    c_c = C_ssm.reshape(Bsz, nc, chunk, N).swapaxes(0, 1)
+    dt_c = dt.reshape(Bsz, nc, chunk, nh).swapaxes(0, 1)
+
+    def chunk_step(carry, xs_in):
+        S_state = carry                                   # (B, nh, P, N)
+        xk, bk, ck, dtk = xs_in
+        dA = dtk * A[None, None]                          # (B, L, nh)
+        cum = jnp.cumsum(dA, axis=1)
+        # intra-chunk: scores[b,h,i,j] = exp(cum_i - cum_j) * (C_i . B_j) * dt_j
+        seg = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])   # (B,L,L,nh)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        cb = jnp.einsum("bin,bjn->bij", ck, bk)                   # (B,L,L)
+        w = jnp.where(causal[None, :, :, None], seg, 0.0) * cb[..., None] \
+            * dtk[:, None, :, :]                                  # (B,L,L,nh)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xk)            # (B,L,nh,P)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp",
+                             ck, S_state, jnp.exp(cum))
+        # new chunk state
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)              # (B,L,nh)
+        contrib = jnp.einsum("bjhp,bjn,bjh->bhpn",
+                             xk, bk, decay_to_end * dtk)
+        S_new = S_state * jnp.exp(cum[:, -1])[:, :, None, None] + contrib
+        return S_new, y_intra + y_inter
+
+    S0 = (jnp.zeros((Bsz, nh, P, N), jnp.float32)
+          if state is None else state[1])
+    S_last, y_chunks = jax.lax.scan(chunk_step, S0, (xs_c, b_c, c_c, dt_c))
+    y = y_chunks.swapaxes(0, 1).reshape(Bsz, Sp, nh, P)[:, :S]
+    y = y + params["D_skip"][None, None, :, None] * xs[:, :S]
+    y = y.reshape(Bsz, S, di).astype(x.dtype)
+    y = rms_norm(y * silu(z), params["norm_w"])
+    return y @ params["out_proj"], (new_conv, S_last)
+
+
+def mamba2_decode(params, x, state, ssm):
+    y, new_state = mamba2_forward(params, x, ssm, chunk=1, state=state)
+    return y, new_state

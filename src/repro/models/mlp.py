@@ -1,0 +1,37 @@
+"""Feed-forward blocks: SwiGLU / GeGLU (gated) and plain GELU (whisper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import KeyGen, normal_init, silu
+
+
+def init_gated_mlp(kg: KeyGen, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    return {
+        "wg": normal_init(kg(), (d_model, d_ff), dtype=dtype),
+        "wu": normal_init(kg(), (d_model, d_ff), dtype=dtype),
+        "wd": normal_init(kg(), (d_ff, d_model), dtype=dtype),
+    }
+
+
+def gated_mlp(params, x, act: str = "swiglu"):
+    fn = silu if act == "swiglu" else jax.nn.gelu
+    g = fn(x @ params["wg"])
+    u = x @ params["wu"]
+    return (g * u) @ params["wd"]
+
+
+def init_gelu_mlp(kg: KeyGen, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    return {
+        "w1": normal_init(kg(), (d_model, d_ff), dtype=dtype),
+        "b1": jnp.zeros((d_ff,), dtype),
+        "w2": normal_init(kg(), (d_ff, d_model), dtype=dtype),
+        "b2": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(params, x):
+    h = jax.nn.gelu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]

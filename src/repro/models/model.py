@@ -1,0 +1,278 @@
+"""Model facade: one entry point per mode for every architecture family.
+
+  init_params(cfg, key)                 -> params pytree
+  train_logits(cfg, params, batch)      -> (B, S, V) f32
+  loss_fn(cfg, params, batch)           -> scalar loss, metrics
+  prefill(cfg, params, batch)           -> (last_logits, caches)
+  decode_step(cfg, params, caches, token, pos) -> (logits, caches)
+  init_caches(cfg, batch, max_len)      -> cache pytree
+  input_specs(cfg, shape)               -> ShapeDtypeStruct batch for dry-runs
+
+``batch`` is a dict: tokens/labels for LMs; + vision_embeds (vlm stub) or
+frames (audio stub).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from . import encdec, shardctx
+from .common import KeyGen, normal_init, rms_norm, softcap
+from .transformer import (apply_block, init_block, init_lm_caches,
+                          init_lm_params, lm_apply)
+
+DEC_RATIO = encdec.DEC_RATIO
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key, *, max_enc: int = 4096,
+                max_dec: int = 512):
+    if cfg.enc_dec:
+        return encdec.init_encdec_params(cfg, key, max_enc=max_enc,
+                                         max_dec=max_dec)
+    return init_lm_params(cfg, key)
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int):
+    if cfg.enc_dec:
+        return encdec.init_decoder_caches(cfg, batch,
+                                          max_dec=max(1, max_len // DEC_RATIO),
+                                          max_enc=max_len)
+    return init_lm_caches(cfg, batch, max_len)
+
+
+# --------------------------------------------------------------------------
+# embedding front ends (modality stubs live here)
+# --------------------------------------------------------------------------
+
+def _embed_tokens(cfg: ArchConfig, params, batch):
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.vision_tokens and "vision_embeds" in batch:
+        # VLM stub: first ``vision_tokens`` positions carry patch embeddings
+        v = batch["vision_embeds"].astype(x.dtype)
+        x = jax.lax.dynamic_update_slice(x, v, (0, 0, 0))
+    # the gather over the vocab-sharded table emits a replicated result
+    # (SPMD fallback); re-anchor the batch sharding or every downstream
+    # activation computes dp-x replicated.
+    return shardctx.anchor_batch(x)
+
+
+def _lm_logits(cfg: ArchConfig, params, hidden):
+    if cfg.tie_embeddings:
+        logits = hidden @ params["embed"].T
+    else:
+        logits = hidden @ params["lm_head"]
+    logits = logits.astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = softcap(logits, cfg.final_softcap)
+    return logits
+
+
+# --------------------------------------------------------------------------
+# train / loss
+# --------------------------------------------------------------------------
+
+def _train_hidden(cfg: ArchConfig, params, batch, remat: bool = False):
+    if cfg.enc_dec:
+        enc_out = encdec.encode(cfg, params, batch["frames"], remat=remat)
+        return encdec.decode_train(cfg, params, enc_out, batch["tokens"],
+                                   remat=remat)
+    x = _embed_tokens(cfg, params, batch)
+    hidden, _ = lm_apply(cfg, params, x, mode="train", remat=remat)
+    return hidden
+
+
+def train_logits(cfg: ArchConfig, params, batch, remat: bool = False):
+    hidden = _train_hidden(cfg, params, batch, remat=remat)
+    if cfg.enc_dec:
+        return hidden @ params["embed"].T
+    return _lm_logits(cfg, params, hidden)
+
+
+def _head_matrix(cfg: ArchConfig, params):
+    return params["embed"].T if cfg.tie_embeddings or cfg.enc_dec \
+        else params["lm_head"]
+
+
+def chunked_cross_entropy(cfg: ArchConfig, params, hidden, labels,
+                          chunk: int = 512):
+    """Token-chunked CE: the (tokens x vocab) logits tensor never exists in
+    full — each chunk's logits are computed, reduced and (via checkpoint)
+    recomputed in the backward pass. The gold logit uses an iota mask, not
+    a gather, so the vocab axis stays sharded."""
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    nc = S // chunk if S % chunk == 0 else 1
+    chunk = S // nc
+    hs = hidden.reshape(B, nc, chunk, D).swapaxes(0, 1)
+    ls = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+    head = _head_matrix(cfg, params)
+
+    def body(acc, xs):
+        h, l = xs
+        h = shardctx.anchor_batch(h)           # chunk transpose drops it
+        logits = (h @ head).astype(jnp.float32)
+        if cfg.final_softcap is not None:
+            logits = softcap(logits, cfg.final_softcap)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        gold = jnp.sum(jnp.where(iota == l[..., None], logits, 0.0), axis=-1)
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(body), jnp.float32(0.0), (hs, ls))
+    return total / (B * S)
+
+
+def loss_fn(cfg: ArchConfig, params, batch, remat: bool = False):
+    hidden = shardctx.anchor_batch(
+        _train_hidden(cfg, params, batch, remat=remat))
+    nll = chunked_cross_entropy(cfg, params, hidden, batch["labels"])
+    metrics = {"loss": nll, "perplexity": jnp.exp(nll)}
+    return nll, metrics
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+def prefill(cfg: ArchConfig, params, batch):
+    """Full-prompt forward that returns caches + last-position logits."""
+    if cfg.enc_dec:
+        enc_out = encdec.encode(cfg, params, batch["frames"])
+        ck, cv = encdec.precompute_cross_caches(cfg, params, enc_out)
+        B = enc_out.shape[0]
+        dec_len = max(1, batch["frames"].shape[1] // DEC_RATIO)
+        hd = cfg.resolved_head_dim()
+        caches = {
+            "self_k": jnp.zeros((cfg.n_layers, B, dec_len, cfg.n_heads, hd),
+                                jnp.bfloat16),
+            "self_v": jnp.zeros((cfg.n_layers, B, dec_len, cfg.n_heads, hd),
+                                jnp.bfloat16),
+            "cross_k": ck, "cross_v": cv,
+        }
+        bos = jnp.zeros((B, 1), jnp.int32)
+        logits, caches = encdec.decode_step(cfg, params, caches, bos,
+                                            jnp.int32(0))
+        return logits, caches
+    x = _embed_tokens(cfg, params, batch)
+    hidden, caches = lm_apply(cfg, params, x, mode="prefill")
+    logits = _lm_logits(cfg, params, hidden[:, -1:])
+    return logits, caches
+
+
+def decode_step(cfg: ArchConfig, params, caches, token, pos):
+    """token: (B, 1) int32; pos: scalar int32 (current cache length)."""
+    if cfg.enc_dec:
+        return encdec.decode_step(cfg, params, caches, token, pos)
+    x = jnp.take(params["embed"], token, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    hidden, new_caches = lm_apply(cfg, params, x, mode="decode",
+                                  caches=caches, pos=pos)
+    return _lm_logits(cfg, params, hidden), new_caches
+
+
+# --------------------------------------------------------------------------
+# dry-run input specs
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    B, S = shape.global_batch, shape.seq_len
+    f = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        if cfg.enc_dec:
+            return {"frames": f((B, S, cfg.d_model), jnp.bfloat16),
+                    "tokens": f((B, S // DEC_RATIO), jnp.int32),
+                    "labels": f((B, S // DEC_RATIO), jnp.int32)}
+        batch = {"tokens": f((B, S), jnp.int32), "labels": f((B, S), jnp.int32)}
+    elif shape.kind == "prefill":
+        if cfg.enc_dec:
+            return {"frames": f((B, S, cfg.d_model), jnp.bfloat16)}
+        batch = {"tokens": f((B, S), jnp.int32)}
+    else:  # decode: inputs are (caches, token, pos); caches specs built via
+        # eval_shape in the launcher
+        batch = {"tokens": f((B, 1), jnp.int32)}
+    if cfg.vision_tokens and not cfg.enc_dec and shape.kind != "decode":
+        batch["vision_embeds"] = f((B, cfg.vision_tokens, cfg.d_model),
+                                   jnp.bfloat16)
+    return batch
+
+
+# --------------------------------------------------------------------------
+# analytic parameter counts (roofline bookkeeping)
+# --------------------------------------------------------------------------
+
+def count_params_analytic(cfg: ArchConfig, active_only: bool = False) -> int:
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.vocab
+    hd = cfg.resolved_head_dim()
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+
+    def attn_block(mlp: bool = True) -> int:
+        n = D * H * hd * 2 + D * KV * hd * 2 + 2 * D
+        if cfg.qkv_bias:
+            n += H * hd + 2 * KV * hd
+        if not mlp:
+            return n
+        if cfg.moe is not None:
+            e = cfg.moe.top_k if active_only else cfg.moe.num_experts
+            n += D * cfg.moe.num_experts + e * 3 * D * F
+            if cfg.moe.dense_residual:
+                n += 3 * D * F
+        elif cfg.act == "gelu":
+            n += 2 * D * F + F + D
+        else:
+            n += 3 * D * F
+        return n
+
+    def mamba1_block() -> int:
+        ssm = cfg.ssm
+        di = ssm.d_inner(D)
+        dtr = ssm.resolved_dt_rank(D)
+        N = ssm.state_dim
+        return (D * 2 * di + di * ssm.conv_kernel + di
+                + di * (dtr + 2 * N) + dtr * di + di + di * N + di
+                + di * D + D)
+
+    def mamba2_block() -> int:
+        ssm = cfg.ssm
+        di = ssm.d_inner(D)
+        N = ssm.state_dim
+        nh = di // ssm.head_dim
+        conv_dim = di + 2 * N
+        return (D * (2 * di + 2 * N + nh) + conv_dim * ssm.conv_kernel
+                + conv_dim + 3 * nh + di + di * D + D)
+
+    kind_count = {"attn": attn_block, "attn_local": attn_block,
+                  "mamba1": mamba1_block, "mamba2": mamba2_block}
+    total = 0
+    full = list(cfg.layer_pattern) * cfg.n_groups + list(cfg.remainder_pattern)
+    shared_counted = False
+    for kind in full:
+        if kind == "shared_attn":
+            if not shared_counted:
+                total += attn_block()
+                shared_counted = True
+            continue
+        total += kind_count[kind]()
+    total += V * D                       # embeddings
+    if not cfg.tie_embeddings:
+        total += D * V
+    total += D                           # final norm
+    if cfg.enc_dec:
+        # encoder stack (MHA + gelu) + positional tables
+        enc_block = D * H * hd * 4 + 2 * D * F + F + D + 4 * D
+        total += cfg.n_encoder_layers * enc_block
+        # decoder cross-attn already excluded from `full` (enc_dec uses its
+        # own path); approximate: + cross attn per decoder layer
+        total += cfg.n_layers * (D * H * hd * 4 + 4 * D)
+    return int(total)

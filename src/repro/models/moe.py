@@ -1,0 +1,115 @@
+"""Mixture-of-Experts FFN with capacity-bucketed sort-based dispatch.
+
+TPU adaptation notes: GPU MoE implementations scatter tokens with
+per-expert dynamic buffers; on TPU everything must be static-shaped, so we
+use the standard grouped-einsum formulation (as in MaxText/Mixtral-JAX):
+
+  1. top-k routing over E experts (softmax over the selected k);
+  2. sort expanded token-slots by expert id; position-within-expert via a
+     cumulative count, dropping tokens beyond ``capacity``;
+  3. scatter into a dense (E, C, D) buffer, one grouped einsum per FFN
+     matmul with the expert dimension sharded over the ``model`` mesh axis
+     (expert parallelism), gather-combine weighted by the gates.
+
+Everything is differentiable (gather/scatter-add); dropped tokens simply
+contribute their residual stream unchanged.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import KeyGen, normal_init, silu
+
+
+def init_moe(kg: KeyGen, d_model: int, d_ff: int, num_experts: int,
+             dense_residual: bool, dtype=jnp.bfloat16):
+    p = {
+        "router": normal_init(kg(), (d_model, num_experts), scale=0.02,
+                              dtype=jnp.float32),
+        "wg": normal_init(kg(), (num_experts, d_model, d_ff), dtype=dtype),
+        "wu": normal_init(kg(), (num_experts, d_model, d_ff), dtype=dtype),
+        "wd": normal_init(kg(), (num_experts, d_ff, d_model), dtype=dtype),
+    }
+    if dense_residual:
+        p["res"] = {
+            "wg": normal_init(kg(), (d_model, d_ff), dtype=dtype),
+            "wu": normal_init(kg(), (d_model, d_ff), dtype=dtype),
+            "wd": normal_init(kg(), (d_ff, d_model), dtype=dtype),
+        }
+    return p
+
+
+def _dispatch_one_row(xt, router, wg, wu, wd, *, top_k: int, C: int, act):
+    """Sort-based dispatch for ONE batch row. xt: (S, D)."""
+    S, D = xt.shape
+    E = router.shape[-1]
+    logits = xt.astype(jnp.float32) @ router                     # (S, E)
+    gates, idx = jax.lax.top_k(logits, top_k)                    # (S, k)
+    gates = jax.nn.softmax(gates, axis=-1)                       # renormalize
+
+    flat_e = idx.reshape(-1)                                     # (S*k,)
+    order = jnp.argsort(flat_e)                                  # stable
+    sorted_e = flat_e[order]
+    ranks = jnp.arange(S * top_k)
+    counts = jnp.bincount(sorted_e, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = ranks - starts[sorted_e]
+
+    keep = pos_in_e < C
+    slot = jnp.where(keep, sorted_e * C + pos_in_e, E * C)       # overflow bin
+    token_of = order // top_k
+    buf = jnp.zeros((E * C + 1, D), xt.dtype).at[slot].set(xt[token_of])
+    buf = buf[: E * C].reshape(E, C, D)
+
+    g = act(jnp.einsum("ecd,edf->ecf", buf, wg))
+    u = jnp.einsum("ecd,edf->ecf", buf, wu)
+    y = jnp.einsum("ecf,efd->ecd", g * u, wd)                    # (E, C, D)
+
+    yf = y.reshape(E * C, D)
+    flat_gate = gates.reshape(-1)[order]
+    contrib = jnp.where(
+        keep[:, None], yf[jnp.clip(slot, 0, E * C - 1)], 0.0
+    ) * flat_gate[:, None].astype(xt.dtype)
+    return jnp.zeros((S, D), xt.dtype).at[token_of].add(contrib)
+
+
+def moe_ffn(params, x, *, top_k: int, capacity_factor: float = 1.25,
+            act=silu):
+    """x: (B, S, D) -> (B, S, D).
+
+    Dispatch is LOCAL per batch row (vmap over B): a global argsort over
+    all B*S tokens would run on the batch-sharded token stream and drag
+    all-gathers/all-to-alls through every layer; per-row sort keeps the
+    whole routing computation on the row's own shard. Capacity is per-row
+    (S*k/E*factor), so the kept-token semantics match per-shard dispatch
+    on a real EP deployment. Expert weights stay sharded over ``model``
+    (expert parallelism); the grouped einsums contract locally per expert
+    shard."""
+    from . import shardctx
+    B, S, D = x.shape
+    E = params["router"].shape[-1]
+    C = int(max(1, int(S * top_k / E * capacity_factor)))
+    # anchor around the vmapped dispatch: the data-dependent token gather
+    # inside is another SPMD gather-fallback site that would otherwise
+    # replicate the expanded (B, S*k, D) stream over the data axis
+    x = shardctx.anchor_batch(x)
+    out = jax.vmap(
+        lambda row: _dispatch_one_row(
+            row, params["router"], params["wg"], params["wu"], params["wd"],
+            top_k=top_k, C=C, act=act))(x)
+    return shardctx.anchor_batch(out)
+
+
+def moe_aux_loss(params, x, *, top_k: int) -> jnp.ndarray:
+    """Load-balancing auxiliary loss (Switch-style): E * sum(f_e * p_e)."""
+    B, S, D = x.shape
+    E = params["router"].shape[-1]
+    logits = x.reshape(-1, D).astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    _, idx = jax.lax.top_k(logits, top_k)
+    hard = jax.nn.one_hot(idx, E).sum(axis=1)                    # (T, E)
+    f = hard.mean(axis=0)
+    p = probs.mean(axis=0)
+    return E * jnp.sum(f * p)

@@ -1,0 +1,57 @@
+"""Activation-sharding context for model code.
+
+SPMD propagation loses the batch sharding at a few ops (most notably the
+embedding gather over a vocab-sharded table, where XLA falls back to
+"involuntary full rematerialization" and emits a replicated result). Every
+activation downstream then computes replicated over the data axis — a
+silent dp-x compute/memory multiplier.
+
+The launcher installs the mesh here before lowering; model code calls
+``anchor_batch`` at a handful of propagation roots (post-embedding, post
+layer-stack, CE chunks). On a single device (tests, examples) the context
+is unset and everything is a no-op.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = None
+_DP: tuple[str, ...] = ("data",)
+
+
+def set_mesh(mesh, dp_axes: tuple[str, ...]) -> None:
+    global _MESH, _DP
+    _MESH = mesh
+    _DP = tuple(dp_axes)
+
+
+def clear() -> None:
+    global _MESH
+    _MESH = None
+
+
+def dp_size() -> int:
+    if _MESH is None:
+        return 1
+    sizes = dict(zip(_MESH.axis_names, _MESH.devices.shape))
+    out = 1
+    for a in _DP:
+        out *= sizes.get(a, 1)
+    return out
+
+
+def anchor_batch(x, batch_axis: int = 0):
+    """Constrain dim ``batch_axis`` of x to the data axes (if divisible)."""
+    if _MESH is None or x is None:
+        return x
+    n = dp_size()
+    if x.shape[batch_axis] % n or x.shape[batch_axis] < n:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_axis] = _DP
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, P(*spec)))

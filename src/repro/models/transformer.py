@@ -1,0 +1,306 @@
+"""Decoder-only LM assembled from an ArchConfig.
+
+The layer stack is organized as ``n_groups`` identical *groups* scanned with
+``lax.scan`` (weights stacked on a leading group axis) plus an unrolled
+remainder. A group is a short statically-unrolled pattern of blocks — e.g.
+gemma2 = (local, global), gemma3 = (local x5, global), zamba2 =
+(mamba2 x6, shared_attn) — which keeps heterogeneous architectures inside a
+single scan so HLO size is O(pattern), not O(n_layers).
+
+Three modes share the same block code:
+  * train:   causal forward, no caches;
+  * prefill: causal forward, returns per-layer KV/state caches;
+  * decode:  one token against the caches (``pos`` = current length).
+
+zamba2's ``shared_attn`` blocks share one physical weight set across all
+groups (passed as a closed-over constant in the scan body) while each group
+application keeps its own KV cache (stacked, scanned) — matching the
+published architecture.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .attention import attention_blockwise, attention_decode
+from .common import KeyGen, normal_init, rms_norm, layer_norm, rope
+from .mamba import (init_mamba1, init_mamba2, mamba1_forward, mamba2_forward)
+from .mlp import gated_mlp, gelu_mlp, init_gated_mlp, init_gelu_mlp
+from .moe import init_moe, moe_ffn
+
+
+# --------------------------------------------------------------------------
+# per-block init
+# --------------------------------------------------------------------------
+
+def _init_attn_block(kg: KeyGen, cfg: ArchConfig, with_mlp: bool = True):
+    D = cfg.d_model
+    hd = cfg.resolved_head_dim()
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    p: dict[str, Any] = {
+        "ln1": jnp.zeros((D,), jnp.float32),
+        "wq": normal_init(kg(), (D, H * hd)),
+        "wk": normal_init(kg(), (D, KV * hd)),
+        "wv": normal_init(kg(), (D, KV * hd)),
+        "wo": normal_init(kg(), (H * hd, D)),
+        "ln2": jnp.zeros((D,), jnp.float32),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), jnp.bfloat16)
+        p["bk"] = jnp.zeros((KV * hd,), jnp.bfloat16)
+        p["bv"] = jnp.zeros((KV * hd,), jnp.bfloat16)
+    if with_mlp:
+        if cfg.moe is not None:
+            p["moe"] = init_moe(kg, D, cfg.d_ff, cfg.moe.num_experts,
+                                cfg.moe.dense_residual)
+        elif cfg.act == "gelu":
+            p["mlp"] = init_gelu_mlp(kg, D, cfg.d_ff)
+        else:
+            p["mlp"] = init_gated_mlp(kg, D, cfg.d_ff)
+    return p
+
+
+def init_block(kg: KeyGen, cfg: ArchConfig, kind: str):
+    if kind in ("attn", "attn_local", "shared_attn"):
+        return _init_attn_block(kg, cfg)
+    if kind == "mamba1":
+        return {"ln": jnp.zeros((cfg.d_model,), jnp.float32),
+                "mixer": init_mamba1(kg, cfg.d_model, cfg.ssm)}
+    if kind == "mamba2":
+        return {"ln": jnp.zeros((cfg.d_model,), jnp.float32),
+                "mixer": init_mamba2(kg, cfg.d_model, cfg.ssm)}
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# per-block apply
+# --------------------------------------------------------------------------
+
+def _norm(cfg: ArchConfig, p, x):
+    return rms_norm(x, p)    # decoder-only archs here are all RMSNorm
+
+
+def init_block_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int):
+    hd = cfg.resolved_head_dim()
+    if kind in ("attn", "attn_local", "shared_attn"):
+        shape = (batch, max_len, cfg.n_kv_heads, hd)
+        return {"k": jnp.zeros(shape, jnp.bfloat16),
+                "v": jnp.zeros(shape, jnp.bfloat16)}
+    ssm = cfg.ssm
+    di = ssm.d_inner(cfg.d_model)
+    K = ssm.conv_kernel
+    if kind == "mamba1":
+        return {"conv": jnp.zeros((batch, K - 1, di), jnp.bfloat16),
+                "ssm": jnp.zeros((batch, di, ssm.state_dim), jnp.float32)}
+    if kind == "mamba2":
+        nh = di // ssm.head_dim
+        N = ssm.state_dim
+        return {"conv": {"x": jnp.zeros((batch, K - 1, di), jnp.bfloat16),
+                         "B": jnp.zeros((batch, K - 1, N), jnp.bfloat16),
+                         "C": jnp.zeros((batch, K - 1, N), jnp.bfloat16)},
+                "ssm": jnp.zeros((batch, nh, ssm.head_dim, N), jnp.float32)}
+    raise ValueError(kind)
+
+
+def apply_block(cfg: ArchConfig, kind: str, p, x, *, mode: str,
+                cache=None, pos=None):
+    """Returns (x, new_cache). new_cache is None in train mode."""
+    if kind in ("attn", "attn_local", "shared_attn"):
+        return _apply_attn(cfg, kind, p, x, mode=mode, cache=cache, pos=pos)
+    ln = p["ln"]
+    mixer = p["mixer"]
+    h = _norm(cfg, ln, x)
+    fwd = mamba1_forward if kind == "mamba1" else mamba2_forward
+    to_bf16 = lambda c: jax.tree.map(lambda a: a.astype(jnp.bfloat16), c)
+    if mode == "train":
+        y, _ = fwd(mixer, h, cfg.ssm, chunk=cfg.scan_chunk)
+        return x + y, None
+    if mode == "prefill":
+        y, (conv, ssm_state) = fwd(mixer, h, cfg.ssm, chunk=cfg.scan_chunk)
+        return x + y, {"conv": to_bf16(conv), "ssm": ssm_state}
+    # decode
+    y, (conv, ssm_state) = fwd(mixer, h, cfg.ssm,
+                               state=(cache["conv"], cache["ssm"]))
+    return x + y, {"conv": to_bf16(conv), "ssm": ssm_state}
+
+
+def _apply_attn(cfg: ArchConfig, kind: str, p, x, *, mode, cache, pos):
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim()
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    window = cfg.local_window if kind == "attn_local" else None
+
+    h = _norm(cfg, p["ln1"], x)
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if mode == "decode":
+        positions = jnp.full((B, 1), pos, jnp.int32)
+    else:
+        positions = jnp.arange(S)[None, :]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if mode == "train":
+        o = attention_blockwise(q, k, v, causal=True, window=window,
+                                softcap=cfg.attn_softcap,
+                                q_chunk=cfg.attn_q_chunk,
+                                kv_chunk=cfg.attn_kv_chunk)
+    elif mode == "prefill":
+        o = attention_blockwise(q, k, v, causal=True, window=window,
+                                softcap=cfg.attn_softcap,
+                                q_chunk=cfg.attn_q_chunk,
+                                kv_chunk=cfg.attn_kv_chunk)
+        new_cache = {"k": k, "v": v}
+    else:  # decode: write the new token's k/v at slot ``pos``
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
+        o = attention_decode(q, kc, vc, cache_len=pos, window=window,
+                             softcap=cfg.attn_softcap)
+        new_cache = {"k": kc, "v": vc}
+    x = x + (o.reshape(B, S, H * hd) @ p["wo"])
+
+    h2 = _norm(cfg, p["ln2"], x)
+    if cfg.moe is not None and "moe" in p:
+        y = moe_ffn(p["moe"], h2, top_k=cfg.moe.top_k,
+                    capacity_factor=cfg.moe.capacity_factor)
+        if cfg.moe.dense_residual:
+            y = y + gated_mlp(p["moe"]["res"], h2, cfg.act)
+    elif cfg.act == "gelu":
+        y = gelu_mlp(p["mlp"], h2)
+    else:
+        y = gated_mlp(p["mlp"], h2, cfg.act)
+    return x + y, new_cache
+
+
+# --------------------------------------------------------------------------
+# full stack
+# --------------------------------------------------------------------------
+
+def init_lm_params(cfg: ArchConfig, key) -> dict:
+    kg = KeyGen(key)
+    pattern = cfg.layer_pattern
+    has_shared = "shared_attn" in pattern
+
+    def one_group():
+        return {f"b{i}": (None if k == "shared_attn" else init_block(kg, cfg, k))
+                for i, k in enumerate(pattern)}
+
+    # stacked group weights: init G copies and stack leaves
+    groups = [one_group() for _ in range(cfg.n_groups)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *groups) if cfg.n_groups \
+        else {}
+    # drop shared placeholders (None) from the stacked tree
+    stacked = {k: v for k, v in stacked.items() if v is not None} \
+        if isinstance(stacked, dict) else stacked
+
+    params: dict[str, Any] = {
+        "embed": normal_init(kg(), (cfg.vocab, cfg.d_model)),
+        "groups": stacked,
+        "rest": [init_block(kg, cfg, k) for k in cfg.remainder_pattern],
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if has_shared:
+        params["shared_attn"] = init_block(kg, cfg, "shared_attn")
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(kg(), (cfg.d_model, cfg.vocab))
+    return params
+
+
+def _group_body(cfg: ArchConfig, mode: str, shared, pos):
+    """Returns the scan body over one group. xs = (group_params, group_cache)."""
+    pattern = cfg.layer_pattern
+
+    def body(x, xs):
+        gp, gcache = xs
+        new_caches = {}
+        for i, kind in enumerate(pattern):
+            p = shared if kind == "shared_attn" else gp[f"b{i}"]
+            c = None if gcache is None else gcache.get(f"b{i}")
+            x, nc = apply_block(cfg, kind, p, x, mode=mode, cache=c, pos=pos)
+            if nc is not None:
+                new_caches[f"b{i}"] = nc
+        return x, (new_caches if new_caches else None)
+
+    return body
+
+
+def lm_apply(cfg: ArchConfig, params, x, *, mode: str, caches=None, pos=None,
+             remat: bool = False):
+    """Run the full stack on hidden states x (B, S, D).
+
+    caches: {"groups": stacked-per-group cache pytree, "rest": [cache, ...]}
+    Returns (hidden, new_caches or None). ``remat=True`` checkpoints each
+    scanned group (training memory = one group's activations).
+    """
+    shared = params.get("shared_attn")
+    body = _group_body(cfg, mode, shared, pos)
+    gcaches = None if caches is None else caches["groups"]
+    if cfg.n_groups > 0:
+        if mode == "train":
+            train_body = lambda c, gp: (body(c, (gp, None))[0], None)
+            if remat:
+                train_body = jax.checkpoint(train_body)
+            x, _ = jax.lax.scan(train_body, x, params["groups"])
+            new_group_caches = None
+        elif mode == "prefill":
+            x, stacked = jax.lax.scan(lambda c, xs: body(c, xs), x,
+                                      (params["groups"], None))
+            # caches live as a LIST of per-group trees: decode updates them
+            # in place per group (unrolled), which lets XLA alias the
+            # donated buffers instead of double-buffering a stacked tensor.
+            new_group_caches = [
+                jax.tree.map(lambda t, g=g: t[g], stacked)
+                for g in range(cfg.n_groups)
+            ]
+        else:  # decode: unrolled loop, per-group cache aliasing
+            new_group_caches = []
+            for g in range(cfg.n_groups):
+                gp = jax.tree.map(lambda t, g=g: t[g], params["groups"])
+                x, nc = body(x, (gp, gcaches[g]))
+                new_group_caches.append(nc)
+    else:
+        new_group_caches = gcaches
+
+    new_rest = []
+    for i, kind in enumerate(cfg.remainder_pattern):
+        c = None if caches is None else caches["rest"][i]
+        if remat and mode == "train":
+            fn = jax.checkpoint(
+                lambda p, h, _cfg=cfg, _kind=kind:
+                apply_block(_cfg, _kind, p, h, mode="train")[0])
+            x, nc = fn(params["rest"][i], x), None
+        else:
+            x, nc = apply_block(cfg, kind, params["rest"][i], x, mode=mode,
+                                cache=c, pos=pos)
+        new_rest.append(nc)
+    x = rms_norm(x, params["final_norm"])
+    if mode == "train":
+        return x, None
+    return x, {"groups": new_group_caches, "rest": new_rest}
+
+
+def init_lm_caches(cfg: ArchConfig, batch: int, max_len: int):
+    pattern = cfg.layer_pattern
+
+    def one_group():
+        return {f"b{i}": init_block_cache(cfg, k, batch, max_len)
+                for i, k in enumerate(pattern)}
+
+    groups = [one_group() for _ in range(cfg.n_groups)]
+    rest = [init_block_cache(cfg, k, batch, max_len)
+            for k in cfg.remainder_pattern]
+    return {"groups": groups, "rest": rest}

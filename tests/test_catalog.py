@@ -1,0 +1,57 @@
+import pytest
+
+from repro.core import GridTopology, ReplicaCatalog
+
+
+def make_topo():
+    return GridTopology(2, 3, lan_bandwidth=125e6, wan_bandwidth=1.25e6,
+                        storage_capacity=10e9)
+
+
+def test_register_and_query():
+    cat = ReplicaCatalog()
+    cat.register_file("f1", 500e6, master_site=0)
+    assert cat.holders("f1") == {0}
+    assert cat.size("f1") == 500e6
+    assert cat.is_master("f1", 0)
+    cat.add_replica("f1", 3)
+    assert cat.holders("f1") == {0, 3}
+    assert cat.n_copies("f1") == 2
+
+
+def test_duplicate_registration_rejected():
+    cat = ReplicaCatalog()
+    cat.register_file("f1", 1.0, 0)
+    with pytest.raises(ValueError):
+        cat.register_file("f1", 2.0, 1)
+
+
+def test_master_copy_protected():
+    cat = ReplicaCatalog()
+    cat.register_file("f1", 1.0, 0)
+    cat.add_replica("f1", 1)
+    with pytest.raises(ValueError):
+        cat.remove_replica("f1", 0)
+    cat.remove_replica("f1", 1)
+    assert cat.holders("f1") == {0}
+
+
+def test_bytes_at_site_eq1():
+    """Paper eq. (1): S_s sums only the required files present at s."""
+    cat = ReplicaCatalog()
+    for i, size in enumerate([100.0, 200.0, 400.0]):
+        cat.register_file(f"f{i}", size, master_site=0)
+    cat.add_replica("f1", 2)
+    assert cat.bytes_at_site(["f0", "f1", "f2"], 0) == 700.0
+    assert cat.bytes_at_site(["f1"], 2) == 200.0
+    assert cat.bytes_at_site(["f0", "f2"], 2) == 0.0
+
+
+def test_duplicated_in_region():
+    topo = make_topo()
+    cat = ReplicaCatalog()
+    cat.register_file("f1", 1.0, 0)       # region 0
+    cat.add_replica("f1", 4)              # region 1
+    assert not cat.duplicated_in_region("f1", 4, topo)   # only holder there
+    cat.add_replica("f1", 5)              # region 1, second copy
+    assert cat.duplicated_in_region("f1", 4, topo)

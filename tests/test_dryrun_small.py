@@ -1,0 +1,69 @@
+"""Launch-stack integration: lower + compile on a small fake-device mesh.
+
+Runs in a SUBPROCESS because the device count is locked at first jax init —
+the main pytest process must keep seeing one CPU device.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import jax
+from repro.launch.dryrun import lower_cell
+from repro.launch.hloanalysis import analyze
+from repro.launch.mesh import make_debug_mesh
+
+mesh = make_debug_mesh(4, 2)            # (data=4, model=2)
+import repro.configs.base as B
+import dataclasses
+# shrink shapes so the compile stays quick on CPU
+B.SHAPES = {
+    "train_4k": B.ShapeConfig("train_4k", 256, 8, "train"),
+    "decode_32k": B.ShapeConfig("decode_32k", 512, 8, "decode"),
+    "prefill_32k": B.ShapeConfig("prefill_32k", 256, 8, "prefill"),
+    "long_500k": B.ShapeConfig("long_500k", 1024, 1, "decode"),
+}
+# reduced-size models, published family structure
+_orig = B.get_config
+def patched(arch):
+    return _orig(arch).reduced()
+B.get_config = patched
+import repro.launch.dryrun as D
+D.get_config = patched
+D.SHAPES = B.SHAPES
+
+out = {}
+for arch, shape in [("granite-3-8b", "train_4k"),
+                    ("gemma3-1b", "decode_32k"),
+                    ("falcon-mamba-7b", "prefill_32k"),
+                    ("granite-moe-1b-a400m", "train_4k")]:
+    lowered, meta = lower_cell(arch, shape, mesh)
+    compiled = lowered.compile()
+    st = analyze(compiled.as_text(), pod_boundary=4)
+    out[f"{arch}:{shape}"] = {
+        "flops": st.matmul_flops,
+        "mem": compiled.memory_analysis().temp_size_in_bytes,
+    }
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_small_mesh_lower_compile_all_modes():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert len(out) == 4
+    for cell, stats in out.items():
+        assert stats["flops"] > 0, cell

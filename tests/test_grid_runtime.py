@@ -1,0 +1,93 @@
+"""DataGridService + pipeline + serving router integration."""
+
+import numpy as np
+
+from repro.core import GridTopology
+from repro.data.pipeline import (DataConfig, GridDataLoader,
+                                 SyntheticShardedDataset)
+from repro.grid.datagrid import DataGridService
+from repro.grid.placement import mesh_to_topology
+from repro.serve.engine import GridRouter, Request
+
+
+def make_grid():
+    topo = GridTopology(2, 4, lan_bandwidth=50e9, wan_bandwidth=3e9,
+                        storage_capacity=64e9)
+    return DataGridService(topo)
+
+
+def test_place_job_prefers_data_locality():
+    grid = make_grid()
+    grid.register("a", 4e9, master_site=3)
+    grid.register("b", 1e9, master_site=6)
+    site, stats = grid.place_job(["a", "b"])
+    assert site == 3                      # most required bytes
+    assert len(stats) == 1 and stats[0].lfn == "b"
+
+
+def test_scheduler_sends_job_to_data_not_data_to_job():
+    """With a free choice the broker sends work WHERE THE DATA IS — zero
+    transfers for a sole-replica artifact (the paper's core effect)."""
+    grid = make_grid()
+    grid.register("hot", 2e9, master_site=7)
+    site, stats = grid.place_job(["hot"])
+    assert site == 7 and stats == []
+    assert grid.inter_comm_count() == 0
+
+
+def test_hrs_replication_cuts_wan_traffic_on_reuse():
+    """Consumers pinned in the other region: HRS crosses the WAN once,
+    then serves every later consumer intra-region."""
+    grid = make_grid()
+    grid.register("hot", 2e9, master_site=7)      # region 1
+    for dst in (0, 1, 2):                          # region-0 consumers
+        grid.ensure_local(["hot"], dst)
+    assert grid.inter_comm_count() == 1            # only the first fetch
+    assert grid.wan_bytes() == 2e9
+    assert grid.lan_bytes() == 4e9                 # two intra-region copies
+
+
+def test_loader_deterministic_and_local():
+    topo = GridTopology(2, 4, lan_bandwidth=50e9, wan_bandwidth=3e9,
+                        storage_capacity=512e9)
+    grid = DataGridService(topo)
+    ds = SyntheticShardedDataset(DataConfig(vocab=100, seq_len=16,
+                                            global_batch=4, n_shards=8))
+    loader = GridDataLoader(ds, grid)
+    b1, s1 = loader.next_batch()
+    loader2 = GridDataLoader(SyntheticShardedDataset(
+        DataConfig(vocab=100, seq_len=16, global_batch=4, n_shards=8)),
+        DataGridService(GridTopology(2, 4, lan_bandwidth=50e9,
+                                     wan_bandwidth=3e9,
+                                     storage_capacity=512e9)))
+    b2, s2 = loader2.next_batch()
+    assert (b1["tokens"] == b2["tokens"]).all()
+    assert b1["tokens"].shape == (4, 16)
+    assert (b1["labels"][:, :-1] == b1["tokens"][:, 1:]).all()
+
+
+def test_mesh_to_topology_two_pods():
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        class devices:
+            shape = (2, 16, 16)
+            flat = range(512)
+    import numpy as np
+    topo = mesh_to_topology(FakeMesh, chips_per_host=8)
+    assert topo.n_regions == 2
+    assert topo.sites_per_region == 32     # 256 chips / 8 per host
+    assert topo.wan_links[0].bandwidth < topo.nic_links[0].bandwidth
+
+
+def test_router_sends_requests_to_prefix_holder():
+    grid = make_grid()
+    router = GridRouter(grid, n_engines=grid.topology.n_sites)
+    router.register_prefix("sys-prompt-kv", 1e9, master_site=2)
+    reqs = [Request(i, np.zeros(8, np.int32), prefix_id="sys-prompt-kv")
+            for i in range(4)]
+    sites = [router.route(r) for r in reqs]
+    assert sites[0] == 2                   # prefix lives at 2
+    # queue-load tie-breaks spread subsequent identical requests
+    assert len(set(sites)) >= 1
+    for s, r in zip(sites, reqs):
+        router.complete(s, r)

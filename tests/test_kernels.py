@@ -1,0 +1,109 @@
+"""Pallas kernel validation: interpret=True vs pure-jnp oracles, sweeping
+shapes and dtypes (assignment requirement)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.selective_scan.kernel import selective_scan_kernel
+from repro.kernels.selective_scan.ref import selective_scan_ref
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,KV,Sq,Skv,hd,causal,window,softcap",
+    [
+        (2, 4, 2, 128, 128, 64, True, None, None),
+        (1, 4, 4, 256, 256, 32, True, None, 50.0),
+        (2, 2, 1, 96, 192, 16, False, None, None),     # cross, GQA 2:1
+        (1, 8, 4, 256, 256, 64, True, 64, None),       # sliding window
+        (1, 2, 2, 64, 64, 128, True, None, None),
+        (2, 6, 3, 80, 144, 32, True, None, None),      # ragged sizes (pad)
+    ],
+)
+def test_flash_attention_matches_oracle(B, H, KV, Sq, Skv, hd, causal,
+                                        window, softcap, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, KV, Skv, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, KV, Skv, hd)).astype(dtype)
+    out = flash_attention_kernel(q, k, v, causal=causal, window=window,
+                                 softcap=softcap, block_q=64, block_k=64,
+                                 interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window,
+                              softcap=softcap)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_flash_attention_decode_mode():
+    """q_offset + kv_len emulate one-token decode against a padded cache."""
+    B, H, KV, hd, S = 1, 4, 2, 32, 128
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, H, 1, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), jnp.float32)
+    out = flash_attention_kernel(q, k, v, causal=True, q_offset=99,
+                                 kv_len=100, block_q=8, block_k=64,
+                                 interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, q_offset=99, kv_len=100)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "Bz,S,Di,N,chunk,bd",
+    [
+        (2, 64, 32, 8, 16, 16),
+        (1, 128, 64, 16, 32, 32),
+        (2, 96, 48, 4, 32, 16),
+        (1, 256, 128, 16, 64, 128),
+    ],
+)
+def test_selective_scan_matches_oracle(Bz, S, Di, N, chunk, bd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 7)
+    x = jax.random.normal(ks[0], (Bz, S, Di)).astype(dtype)
+    dt = (jax.nn.softplus(jax.random.normal(ks[1], (Bz, S, Di))) * 0.1
+          ).astype(dtype)
+    B = jax.random.normal(ks[2], (Bz, S, N)).astype(dtype)
+    C = jax.random.normal(ks[3], (Bz, S, N)).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[4], (Di, N)) * 0.3)
+    D = jax.random.normal(ks[5], (Di,))
+    h0 = jax.random.normal(ks[6], (Bz, Di, N))
+    y1, h1 = selective_scan_kernel(x, dt, B, C, A, D, h0, chunk=chunk,
+                                   block_d=bd, interpret=True)
+    y2, h2 = selective_scan_ref(x, dt, B, C, A, D, h0)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32),
+                               atol=TOL[dtype] * 10, rtol=TOL[dtype] * 10)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               atol=TOL[dtype] * 10, rtol=TOL[dtype] * 10)
+
+
+def test_selective_scan_streaming_equivalence():
+    """Scanning a sequence in two kernel calls (carrying h) == one call."""
+    Bz, S, Di, N = 1, 64, 16, 4
+    ks = jax.random.split(jax.random.PRNGKey(2), 6)
+    x = jax.random.normal(ks[0], (Bz, S, Di), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bz, S, Di))) * 0.1
+    B = jax.random.normal(ks[2], (Bz, S, N))
+    C = jax.random.normal(ks[3], (Bz, S, N))
+    A = -jnp.exp(jax.random.normal(ks[4], (Di, N)) * 0.3)
+    D = jax.random.normal(ks[5], (Di,))
+    h0 = jnp.zeros((Bz, Di, N))
+    y_full, h_full = selective_scan_ref(x, dt, B, C, A, D, h0)
+    half = S // 2
+    y1, h_mid = selective_scan_ref(x[:, :half], dt[:, :half], B[:, :half],
+                                   C[:, :half], A, D, h0)
+    y2, h_end = selective_scan_ref(x[:, half:], dt[:, half:], B[:, half:],
+                                   C[:, half:], A, D, h_mid)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_end), np.asarray(h_full),
+                               atol=1e-5)

@@ -1,0 +1,109 @@
+"""Per-arch smoke tests: REDUCED config of the same family, one forward +
+one train step on CPU, asserting output shapes and no NaNs (assignment
+requirement). The FULL configs are exercised only via the dry-run."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import SHAPES, arch_ids, cells, get_config
+from repro.models import model as M
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    if cfg.enc_dec:
+        return {
+            "frames": jnp.ones((B, S, cfg.d_model), jnp.bfloat16),
+            "tokens": tokens[:, : S // 8],
+            "labels": tokens[:, : S // 8],
+        }
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+    if cfg.vision_tokens:
+        batch["vision_embeds"] = jnp.ones((B, cfg.vision_tokens, cfg.d_model),
+                                          jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", arch_ids())
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0), max_enc=S, max_dec=S // 8)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    logits = M.train_logits(cfg, params, batch)
+    exp_s = S // 8 if cfg.enc_dec else S
+    assert logits.shape == (B, exp_s, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", arch_ids())
+def test_one_train_step_no_nans(arch):
+    cfg = get_config(arch).reduced()
+    tcfg = TrainConfig(n_microbatches=2,
+                       opt=OptimizerConfig(warmup_steps=1, total_steps=10))
+    params = M.init_params(cfg, jax.random.PRNGKey(0), max_enc=S, max_dec=S // 8)
+    from repro.train.optimizer import init_opt_state
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    params2, opt2, metrics = step(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually changed
+    moved = jax.tree.leaves(jax.tree.map(
+        lambda a, b: bool(jnp.any(a != b)), params, params2))
+    assert any(moved)
+
+
+@pytest.mark.parametrize("arch", arch_ids())
+def test_exact_published_config_fields(arch):
+    """The full (non-reduced) configs carry the assigned hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "gemma2-27b": (46, 4608, 32, 16, 36864, 256000),
+        "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "falcon-mamba-7b": (64, 4096, 1, 1, 0, 65024),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expected
+    # layer pattern covers all layers
+    assert cfg.n_groups * len(cfg.layer_pattern) \
+        + len(cfg.remainder_pattern) == cfg.n_layers
+
+
+def test_moe_configs():
+    g = get_config("granite-moe-1b-a400m")
+    assert g.moe.num_experts == 32 and g.moe.top_k == 8
+    a = get_config("arctic-480b")
+    assert a.moe.num_experts == 128 and a.moe.top_k == 2 and a.moe.dense_residual
+
+
+def test_long_500k_only_subquadratic():
+    for arch in arch_ids():
+        has_long = "long_500k" in cells(arch)
+        assert has_long == (arch in ("zamba2-7b", "falcon-mamba-7b"))
+
+
+def test_param_counts_order_of_magnitude():
+    from repro.models.model import count_params_analytic
+    approx = {
+        "qwen2-72b": 72e9, "gemma2-27b": 27e9, "granite-3-8b": 8e9,
+        "falcon-mamba-7b": 7e9, "zamba2-7b": 7e9, "arctic-480b": 480e9,
+        "gemma3-1b": 1e9, "granite-moe-1b-a400m": 1.3e9,
+        "internvl2-2b": 1.9e9, "whisper-large-v3": 1.5e9,
+    }
+    for arch, target in approx.items():
+        n = count_params_analytic(get_config(arch))
+        assert 0.5 * target < n < 1.8 * target, (arch, n, target)

@@ -1,0 +1,115 @@
+"""HRS / BHR / LRU decision behaviour (paper §3.3)."""
+
+import pytest
+
+from repro.core import (GridTopology, ReplicaCatalog, StorageState,
+                        make_strategy)
+
+GB = 1e9
+
+
+def build(storage=10 * GB):
+    topo = GridTopology(2, 3, lan_bandwidth=125e6, wan_bandwidth=1.25e6,
+                        storage_capacity=storage)
+    cat = ReplicaCatalog()
+    st = StorageState(cat, topo)
+    return topo, cat, st
+
+
+def add_file(cat, st, lfn, size, master, replicas=()):
+    cat.register_file(lfn, size, master)
+    st.bootstrap(master, lfn)
+    for r in replicas:
+        st.add(r, lfn, now=0.0)
+
+
+def test_hrs_prefers_local_region():
+    topo, cat, st = build()
+    # replica in region 0 (site 1) and region 1 (site 4); dst = site 0
+    add_file(cat, st, "f", 1 * GB, master=4, replicas=[1])
+    hrs = make_strategy("hrs", cat, topo, st)
+    plan = hrs.plan_fetch("f", 0)
+    assert plan.src == 1 and not plan.inter_region and plan.store
+
+
+def test_hrs_intra_region_no_space_uses_temp_buffer():
+    topo, cat, st = build(storage=1 * GB)
+    add_file(cat, st, "full", 1 * GB, master=0)       # dst SE is full
+    add_file(cat, st, "f", 1 * GB, master=1)          # same region
+    hrs = make_strategy("hrs", cat, topo, st)
+    plan = hrs.plan_fetch("f", 0)
+    assert not plan.store and plan.evictions == [] and not plan.inter_region
+
+
+def test_hrs_two_phase_eviction_prefers_region_duplicates():
+    topo, cat, st = build(storage=2 * GB)
+    # dst site 0 holds two evictable replicas: "dup" (duplicated at site 1,
+    # same region) and "solo" (sole copy in region; master elsewhere)
+    add_file(cat, st, "dup", 1 * GB, master=1, replicas=[0])
+    add_file(cat, st, "solo", 1 * GB, master=5, replicas=[0])
+    st.touch(0, "dup", 5.0)     # dup is MORE recently used than solo
+    st.touch(0, "solo", 1.0)
+    # file only available in the other region
+    add_file(cat, st, "f", 2 * GB, master=4)
+    hrs = make_strategy("hrs", cat, topo, st)
+    plan = hrs.plan_fetch("f", 0)
+    assert plan.inter_region and plan.store
+    # phase 1 evicts the in-region duplicate first despite its recent use
+    assert plan.evictions[0] == "dup"
+    assert plan.evictions == ["dup", "solo"]
+
+
+def test_hrs_never_evicts_master_or_pinned():
+    topo, cat, st = build(storage=2 * GB)
+    add_file(cat, st, "m", 1 * GB, master=0)            # master at dst
+    add_file(cat, st, "p", 1 * GB, master=1, replicas=[0])
+    st.pin(0, "p")
+    add_file(cat, st, "f", 1 * GB, master=4)
+    hrs = make_strategy("hrs", cat, topo, st)
+    plan = hrs.plan_fetch("f", 0)
+    # nothing evictable -> temp-buffer fallback
+    assert not plan.store and plan.evictions == []
+
+
+def test_bhr_remote_access_within_region():
+    topo, cat, st = build(storage=1 * GB)
+    add_file(cat, st, "full", 1 * GB, master=0)
+    add_file(cat, st, "f", 1 * GB, master=2)            # same region as 0
+    bhr = make_strategy("bhr", cat, topo, st)
+    plan = bhr.plan_fetch("f", 0)
+    assert plan.remote_access and not plan.store and not plan.inter_region
+
+
+def test_lru_evicts_least_recently_used():
+    topo, cat, st = build(storage=2 * GB)
+    add_file(cat, st, "a", 1 * GB, master=1, replicas=[0])
+    add_file(cat, st, "b", 1 * GB, master=2, replicas=[0])
+    st.touch(0, "a", 1.0)
+    st.touch(0, "b", 9.0)
+    add_file(cat, st, "f", 1 * GB, master=4)
+    lru = make_strategy("lru", cat, topo, st)
+    plan = lru.plan_fetch("f", 0)
+    assert plan.store and plan.evictions == ["a"]
+
+
+def test_single_phase_ablation_ignores_region_duplication():
+    """The ablation strategy evicts strictly by LRU, so the in-region
+    duplicate is NOT prioritized (contrast with the two-phase test above)."""
+    topo, cat, st = build(storage=2 * GB)
+    add_file(cat, st, "dup", 1 * GB, master=1, replicas=[0])
+    add_file(cat, st, "solo", 1 * GB, master=5, replicas=[0])
+    st.touch(0, "dup", 5.0)
+    st.touch(0, "solo", 1.0)
+    add_file(cat, st, "f", 2 * GB, master=4)
+    single = make_strategy("hrs_singlephase", cat, topo, st)
+    plan = single.plan_fetch("f", 0)
+    assert plan.evictions == ["solo", "dup"]        # pure LRU order
+
+
+def test_storage_accounting_exact():
+    topo, cat, st = build()
+    add_file(cat, st, "a", 3 * GB, master=1, replicas=[0])
+    assert topo.sites[0].used_storage == 3 * GB
+    st.remove(0, "a")
+    assert topo.sites[0].used_storage == 0.0
+    assert cat.holders("a") == {1}

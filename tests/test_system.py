@@ -1,0 +1,100 @@
+"""End-to-end behaviour tests for the paper's system.
+
+1. The headline reproduction: HRS + data-aware scheduling beats BHR and LRU
+   on average job time and inter-region communications (paper Figs 4-6).
+2. Grid-integrated training with failure injection recovers and converges.
+3. Serving: greedy generation through the engine matches the teacher-forced
+   argmax path of the same model.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import GridConfig, run_experiment
+
+
+def test_paper_headline_reproduction():
+    # 300+ jobs: the strategies only diverge once SEs come under sustained
+    # pressure (DESIGN.md §8) — shorter runs sit in the warm-up regime
+    res = {s: run_experiment(GridConfig(), strategy=s, n_jobs=300)
+           for s in ("hrs", "bhr", "lru")}
+    # orderings (Figs 4-6)
+    assert res["hrs"].avg_job_time < res["bhr"].avg_job_time
+    assert res["bhr"].avg_job_time < res["lru"].avg_job_time
+    assert res["hrs"].avg_inter_comms < res["lru"].avg_inter_comms
+    # magnitude: paper reports "about 12%" HRS over BHR; we accept a broad
+    # band since the paper under-specifies the workload (DESIGN.md §8)
+    gain = (res["bhr"].avg_job_time - res["hrs"].avg_job_time) \
+        / res["bhr"].avg_job_time
+    assert 0.05 < gain < 0.60
+
+
+def test_scheduler_matters_with_fixed_replication():
+    data_aware = run_experiment(GridConfig(), scheduler="dataaware",
+                                strategy="hrs", n_jobs=150)
+    rand = run_experiment(GridConfig(), scheduler="random",
+                          strategy="hrs", n_jobs=150)
+    assert data_aware.avg_job_time < rand.avg_job_time
+
+
+def test_training_with_failures_recovers(tmp_path):
+    from repro.core import GridTopology
+    from repro.data.pipeline import (DataConfig, GridDataLoader,
+                                     SyntheticShardedDataset)
+    from repro.fault.failures import FailurePlan, TrainingSupervisor
+    from repro.grid.datagrid import DataGridService
+    from repro.train.optimizer import OptimizerConfig
+    from repro.train.train_step import (TrainConfig, init_train_state,
+                                        make_train_step)
+
+    cfg = get_config("gemma3-1b").reduced()
+    topo = GridTopology(2, 4, lan_bandwidth=50e9, wan_bandwidth=3e9,
+                        storage_capacity=64e9)
+    grid = DataGridService(topo)
+    ds = SyntheticShardedDataset(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                            global_batch=4, n_shards=8))
+    loader = GridDataLoader(ds, grid)
+    tcfg = TrainConfig(n_microbatches=1,
+                       opt=OptimizerConfig(peak_lr=2e-3, warmup_steps=2,
+                                           total_steps=60))
+    params, opt = init_train_state(cfg, jax.random.PRNGKey(0))
+    jstep = jax.jit(make_train_step(cfg, tcfg))
+
+    def step_fn(state, i):
+        p, o = state
+        batch, _ = loader.next_batch()
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        p, o, m = jstep(p, o, batch)
+        return (p, o), {"loss": m["loss"]}
+
+    sup = TrainingSupervisor(step_fn, str(tmp_path), ckpt_every=4,
+                             plan=FailurePlan(fail_at_steps=(6,)))
+    state, hist = sup.run((params, opt), 24)
+    assert sup.stats.restarts == 1
+    assert len(hist) >= 24
+    losses = [h["loss"] for h in hist]
+    # learnable affine-recurrence data: loss must fall below the uniform
+    # floor despite the mid-run failure + restore
+    assert min(losses[-6:]) < losses[0] - 0.15
+
+
+def test_serving_engine_matches_teacher_forced():
+    from repro.models import model as M
+    from repro.serve.engine import ServeEngine
+    cfg = get_config("granite-3-8b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_len=48)
+    prompt = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab))
+    out = eng.generate(prompt, n_new=4)
+    assert out.shape == (2, 4)
+    # oracle: greedy continuation via repeated full forward
+    cur = prompt
+    for t in range(4):
+        logits = M.train_logits(cfg, params, {"tokens": jnp.asarray(cur)})
+        nxt = np.asarray(jnp.argmax(logits[:, -1], -1))[:, None]
+        assert (nxt[:, 0] == out[:, t]).all(), f"mismatch at step {t}"
+        cur = np.concatenate([cur, nxt], axis=1)
