@@ -64,6 +64,16 @@ class ReplicaCatalog:
             self.files[lfn].size for lfn in required if site_id in self._holders[lfn]
         )
 
+    def fetchable_holders(self, lfn: str, topology) -> list[int]:
+        """Holders a fetch may source from. Master copies are durable (the
+        paper assumes the master site 'always has a safe copy'), so a master
+        remains fetchable even while its site is marked failed."""
+        master = self.files[lfn].master_site
+        return sorted(
+            h for h in self._holders[lfn]
+            if topology.sites[h].online or h == master
+        )
+
     def duplicated_in_region(self, lfn: str, site_id: int, topology) -> bool:
         """True if some *other* site in site_id's region also holds lfn."""
         region = topology.region_of(site_id)

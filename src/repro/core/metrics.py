@@ -12,12 +12,13 @@ from .workload import GridConfig, build_catalog, build_topology, generate_jobs
 class ExperimentResult:
     scheduler: str
     strategy: str
-    n_jobs: int
+    n_jobs: int                  # submitted count (resubmissions not included)
     avg_job_time: float
     avg_inter_comms: float
     total_wan_gb: float
     total_lan_gb: float
     makespan: float
+    completed_jobs: int = 0      # jobs that actually produced a record
 
 
 def run_experiment(
@@ -29,17 +30,27 @@ def run_experiment(
     failures: list[tuple[int, float, float]] | None = None,
     slowdowns: list[tuple[int, float, float, float]] | None = None,
     speculative_backups: bool = False,
+    broker: str = "event",
+    batch_window: float = 0.0,
+    arrival_burst: int = 1,
 ) -> ExperimentResult:
-    """One full simulation run (the unit behind every paper figure)."""
+    """One full simulation run (the unit behind every paper figure).
+
+    ``arrival_burst`` > 1 submits jobs in bursts of that size (same mean
+    arrival rate); combined with ``broker="jax"`` each burst is dispatched as
+    one jitted batch decision.
+    """
     topology = build_topology(cfg)
     catalog = build_catalog(cfg, topology)
     sim = GridSimulator(topology, catalog, scheduler=scheduler, strategy=strategy,
-                        seed=cfg.seed, speculative_backups=speculative_backups)
+                        seed=cfg.seed, speculative_backups=speculative_backups,
+                        broker=broker, batch_window=batch_window)
     for info in catalog.files.values():
         sim.storage.bootstrap(info.master_site, info.lfn)
     jobs = generate_jobs(cfg, n_jobs)
     for j, job in enumerate(jobs):
-        sim.submit_job(job, at=j * cfg.interarrival)
+        at = (j // arrival_burst) * cfg.interarrival * arrival_burst
+        sim.submit_job(job, at=at)
     for site, at, dur in failures or []:
         sim.inject_failure(site, at, dur)
     for site, at, dur, factor in slowdowns or []:
@@ -50,4 +61,5 @@ def run_experiment(
         avg_job_time=res.avg_job_time, avg_inter_comms=res.avg_inter_comms,
         total_wan_gb=res.total_wan_bytes / 1e9, total_lan_gb=res.total_lan_bytes / 1e9,
         makespan=res.makespan,
+        completed_jobs=len(res.records),
     )

@@ -11,8 +11,10 @@ Storage bookkeeping (LRU clocks, pinning of in-use files) lives in
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
-from typing import Optional
+import itertools
+from typing import Iterable, Optional
 
 from .catalog import ReplicaCatalog
 from .topology import GridTopology
@@ -30,7 +32,14 @@ class FetchPlan:
 
 
 class StorageState:
-    """Per-site SE contents with LRU clocks and pins."""
+    """Per-site SE contents with LRU clocks and pins.
+
+    Recency is kept as a per-site list sorted by ``(last_access, add_seq)``
+    maintained incrementally with bisect, so ``lru_order`` is a copy instead
+    of a full sort per call. ``add_seq`` (monotonic registration counter)
+    reproduces exactly the seed engine's tie-break: a stable sort by access
+    time over dict-insertion order.
+    """
 
     def __init__(self, catalog: ReplicaCatalog, topology: GridTopology) -> None:
         self.catalog = catalog
@@ -40,6 +49,25 @@ class StorageState:
             s.site_id: {} for s in topology.sites
         }
         self._pins: dict[int, dict[str, int]] = {s.site_id: {} for s in topology.sites}
+        self._add_seq: dict[int, dict[str, int]] = {
+            s.site_id: {} for s in topology.sites
+        }
+        self._lru: dict[int, list[tuple[float, int, str]]] = {
+            s.site_id: [] for s in topology.sites
+        }
+        self._seq = 0
+
+    def _lru_insert(self, site: int, lfn: str, now: float) -> None:
+        self._seq += 1
+        self._add_seq[site][lfn] = self._seq
+        bisect.insort(self._lru[site], (now, self._seq, lfn))
+
+    def _lru_discard(self, site: int, lfn: str) -> None:
+        key = (self._contents[site][lfn], self._add_seq[site][lfn], lfn)
+        lst = self._lru[site]
+        i = bisect.bisect_left(lst, key)
+        if i < len(lst) and lst[i] == key:
+            lst.pop(i)
 
     # -- mutation ----------------------------------------------------------
     def add(self, site: int, lfn: str, now: float) -> None:
@@ -48,24 +76,52 @@ class StorageState:
         assert st.free_storage >= size - 1e-9, (
             f"SE overflow at site {site}: need {size}, free {st.free_storage}"
         )
-        self._contents[site][lfn] = now
+        if lfn in self._contents[site]:
+            # Re-add of a file already on the SE (two store transfers can
+            # race for the same key when a temp fetch pops the in-flight
+            # entry): behave like the dict overwrite always did — refresh
+            # the clock, keep the original insertion rank, re-count the
+            # reservation.
+            self.touch(site, lfn, now)
+        else:
+            self._contents[site][lfn] = now
+            self._lru_insert(site, lfn, now)
         st.used_storage += size
         self.catalog.add_replica(lfn, site)
 
     def bootstrap(self, site: int, lfn: str, now: float = 0.0) -> None:
         """Place an initial (master) copy that is already registered in the
         catalog — fills SE bookkeeping without re-registering."""
-        self._contents[site][lfn] = now
+        if lfn in self._contents[site]:
+            self.touch(site, lfn, now)   # re-bootstrap: refresh, don't dup
+        else:
+            self._contents[site][lfn] = now
+            self._lru_insert(site, lfn, now)
         self.topology.sites[site].used_storage += self.catalog.size(lfn)
 
     def remove(self, site: int, lfn: str) -> None:
         assert not self.is_pinned(site, lfn), f"evicting pinned {lfn}@{site}"
+        self._lru_discard(site, lfn)
         del self._contents[site][lfn]
+        del self._add_seq[site][lfn]
         self.topology.sites[site].used_storage -= self.catalog.size(lfn)
         self.catalog.remove_replica(lfn, site)
 
+    def lose(self, site: int, lfn: str) -> None:
+        """Failure path: the SE is gone, so the replica disappears no matter
+        what pins were held."""
+        self._pins[site].pop(lfn, None)
+        self.remove(site, lfn)
+
     def touch(self, site: int, lfn: str, now: float) -> None:
         if lfn in self._contents[site]:
+            if self._contents[site][lfn] != now:
+                key = (self._contents[site][lfn], self._add_seq[site][lfn], lfn)
+                lst = self._lru[site]
+                i = bisect.bisect_left(lst, key)
+                if i < len(lst) and lst[i] == key:
+                    lst.pop(i)
+                    bisect.insort(lst, (now, self._add_seq[site][lfn], lfn))
             self._contents[site][lfn] = now
 
     def pin(self, site: int, lfn: str) -> None:
@@ -85,9 +141,13 @@ class StorageState:
     def holds(self, site: int, lfn: str) -> bool:
         return lfn in self._contents[site]
 
+    def site_contents(self, site: int) -> list[str]:
+        """All lfns currently in the site's SE (snapshot copy)."""
+        return list(self._contents[site])
+
     def lru_order(self, site: int) -> list[str]:
         """Site contents, least-recently-used first."""
-        return sorted(self._contents[site], key=lambda f: self._contents[site][f])
+        return [lfn for _, _, lfn in self._lru[site]]
 
     def evictable(self, site: int, lfn: str) -> bool:
         """Masters and pinned (in-use) files are never evicted."""
@@ -116,21 +176,17 @@ class ReplicaStrategy:
         self.storage = storage
 
     def _online_holders(self, lfn: str) -> list[int]:
-        """Holders we may fetch from. Master copies are durable (the paper
-        assumes the master site 'always has a safe copy'), so a master
-        remains fetchable even while its site is marked failed."""
-        holders = self.catalog.holders(lfn)
-        return sorted(
-            h for h in holders
-            if self.topology.sites[h].online or self.catalog.is_master(lfn, h)
-        )
+        """Holders we may fetch from (see ReplicaCatalog.fetchable_holders)."""
+        return self.catalog.fetchable_holders(lfn, self.topology)
 
     def plan_fetch(self, lfn: str, dst: int) -> FetchPlan:
         raise NotImplementedError
 
-    # Shared helper: evict files in ``order`` (already filtered) until
-    # ``need`` bytes are free at ``site``. Returns evicted list or None.
-    def _evict_until(self, site: int, need: float, order: list[str]) -> list[str]:
+    # Shared helper: evict files in ``order`` (already filtered; any
+    # iterable, consumed only as far as needed) until ``need`` bytes are
+    # free at ``site``. Returns evicted list or [] when impossible.
+    def _evict_until(self, site: int, need: float,
+                     order: "Iterable[str]") -> list[str]:
         freed = self.storage.free(site)
         out: list[str] = []
         for lfn in order:
@@ -170,12 +226,14 @@ class HRSStrategy(ReplicaStrategy):
         if self.storage.free(dst) >= size:
             return FetchPlan(lfn, src, dst, store=True, evictions=[],
                              inter_region=True)
-        # two-phase LRU eviction
+        # two-phase LRU eviction, scanned lazily: phase 1 (region-duplicated
+        # replicas) in LRU order, then phase 2 (the rest) in LRU order —
+        # `_evict_until` stops consuming once enough space is freed
         lru = [f for f in self.storage.lru_order(dst) if self.storage.evictable(dst, f)]
-        phase1 = [f for f in lru
-                  if self.catalog.duplicated_in_region(f, dst, self.topology)]
-        phase2 = [f for f in lru if f not in phase1]
-        evictions = self._evict_until(dst, size, phase1 + phase2)
+        dup = self.catalog.duplicated_in_region
+        evictions = self._evict_until(dst, size, itertools.chain(
+            (f for f in lru if dup(f, dst, self.topology)),
+            (f for f in lru if not dup(f, dst, self.topology))))
         if evictions:
             return FetchPlan(lfn, src, dst, store=True, evictions=evictions,
                              inter_region=True)
@@ -207,9 +265,9 @@ class HRSSinglePhaseStrategy(HRSStrategy):
         if self.storage.free(dst) >= size:
             return FetchPlan(lfn, src, dst, store=True, evictions=[],
                              inter_region=True)
-        lru = [f for f in self.storage.lru_order(dst)
-               if self.storage.evictable(dst, f)]
-        evictions = self._evict_until(dst, size, lru)      # single phase
+        evictions = self._evict_until(       # single phase, lazy LRU scan
+            dst, size, (f for f in self.storage.lru_order(dst)
+                        if self.storage.evictable(dst, f)))
         if evictions:
             return FetchPlan(lfn, src, dst, store=True, evictions=evictions,
                              inter_region=True)
@@ -242,8 +300,9 @@ class BHRStrategy(ReplicaStrategy):
             rsrc = _best_bandwidth_source(in_region, dst, self.topology)
             return FetchPlan(lfn, rsrc, dst, store=False, evictions=[],
                              inter_region=False, remote_access=True)
-        lru = [f for f in self.storage.lru_order(dst) if self.storage.evictable(dst, f)]
-        evictions = self._evict_until(dst, size, lru)
+        evictions = self._evict_until(
+            dst, size, (f for f in self.storage.lru_order(dst)
+                        if self.storage.evictable(dst, f)))
         if evictions:
             return FetchPlan(lfn, src, dst, store=True, evictions=evictions,
                              inter_region=inter)
@@ -266,8 +325,9 @@ class LRUStrategy(ReplicaStrategy):
         if self.storage.free(dst) >= size:
             return FetchPlan(lfn, src, dst, store=True, evictions=[],
                              inter_region=inter)
-        lru = [f for f in self.storage.lru_order(dst) if self.storage.evictable(dst, f)]
-        evictions = self._evict_until(dst, size, lru)
+        evictions = self._evict_until(
+            dst, size, (f for f in self.storage.lru_order(dst)
+                        if self.storage.evictable(dst, f)))
         if evictions:
             return FetchPlan(lfn, src, dst, store=True, evictions=evictions,
                              inter_region=inter)

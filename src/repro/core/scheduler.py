@@ -91,9 +91,13 @@ class ShortestTransferScheduler(SchedulerPolicy):
             for lfn in job.required:
                 if self.catalog.has_replica(lfn, s):
                     continue
-                holders = [h for h in self.catalog.holders(lfn)
-                           if self.topology.sites[h].online]
-                bw = max(self.topology.point_bandwidth(h, s) for h in holders)
+                # Durable masters keep this non-empty even when every
+                # holder's site is down (same rule replica fetches use).
+                holders = self.catalog.fetchable_holders(lfn, self.topology)
+                bw = max((self.topology.point_bandwidth(h, s) for h in holders),
+                         default=0.0)
+                if bw <= 0.0:
+                    return float("inf")
                 t += self.catalog.size(lfn) / bw
             return max(t, self.topology.sites[s].relative_load())
 

@@ -8,9 +8,27 @@ Implements the full job lifecycle of the paper:
   what the event ordering below produces naturally.
 
 Network: event-driven fair-share links with re-rating (each transfer's rate is
-the min over its links of bandwidth/active; rates recomputed on every
-membership change). This reproduces GridSim's contention behaviour — the WAN
-uplink saturates under inter-region traffic — without a packet simulator.
+the min over its links of bandwidth/active). This reproduces GridSim's
+contention behaviour — the WAN uplink saturates under inter-region traffic —
+without a packet simulator.
+
+Engine hot paths are built for 10k-job scale:
+  * transfer state (remaining bytes, rate, link membership) lives in
+    slot-indexed numpy arrays; advancing the fluid model and scanning for the
+    next completion are vectorized instead of per-transfer Python loops;
+  * re-rating is incremental: only transfers sharing a link whose membership
+    changed are re-rated (rates are pure functions of link occupancy, so this
+    is exactly equivalent to a full recompute — bit-identical results);
+  * CPU queues are deques and site-job sets are ordered dicts with O(1)
+    removal; cancelled jobs tombstone in place (``done`` flag) and are
+    skipped when popped, never removed by O(n) scans.
+  * optionally, scheduling decisions are dispatched in jitted batches via
+    ``repro.core.jaxsched`` (``broker="jax"``): simultaneous SUBMIT events
+    (burst arrivals) are placed with one vectorized argmax over a shared
+    catalog/load snapshot; with ``batch_window`` > 0 arrivals are held up to
+    that many seconds and flushed as one batch (batching adds latency, never
+    causality violations). The default ``broker="event"`` keeps the
+    paper-exact sequential semantics.
 
 Beyond the paper (fault-tolerance axis of this framework):
   * site failure/recovery events — non-master replicas lost, queued jobs
@@ -21,10 +39,13 @@ Beyond the paper (fault-tolerance axis of this framework):
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import heapq
 import random as _random
-from typing import Callable, Optional
+from typing import Optional
+
+import numpy as np
 
 from .catalog import ReplicaCatalog
 from .replica import FetchPlan, ReplicaStrategy, StorageState, make_strategy
@@ -35,7 +56,8 @@ from .topology import GridTopology, Link
 # --------------------------------------------------------------------------
 # events
 # --------------------------------------------------------------------------
-SUBMIT, NET, CPU_DONE, FAIL, RECOVER, SLOW_START, SLOW_END, WATCHDOG = range(8)
+(SUBMIT, NET, CPU_DONE, FAIL, RECOVER, SLOW_START, SLOW_END, WATCHDOG,
+ FLUSH) = range(9)
 
 # A transfer is complete when less than one byte remains. Sub-byte residue
 # left by float rounding must count as done, otherwise the event loop can
@@ -43,17 +65,16 @@ SUBMIT, NET, CPU_DONE, FAIL, RECOVER, SLOW_START, SLOW_END, WATCHDOG = range(8)
 _DONE_EPS = 1.0
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class _Transfer:
     tid: int
     plan: FetchPlan
-    remaining: float
     links: list[Link]
-    rate: float = 0.0
+    slot: int = -1
     waiters: list["_JobState"] = dataclasses.field(default_factory=list)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class _JobState:
     job: Job
     site: int = -1
@@ -117,6 +138,8 @@ class GridSimulator:
         seed: int = 0,
         speculative_backups: bool = False,
         straggler_threshold: float = 3.0,
+        broker: str = "event",
+        batch_window: float = 0.0,
     ) -> None:
         self.topology = topology
         self.catalog = catalog
@@ -132,25 +155,64 @@ class GridSimulator:
         self.rng = _random.Random(seed)
         self.speculative_backups = speculative_backups
         self.straggler_threshold = straggler_threshold
+        self.batch_window = batch_window
+        if broker == "jax":
+            if self.scheduler.name != "dataaware":
+                raise ValueError(
+                    "broker='jax' implements only the paper's dataaware "
+                    f"policy; got scheduler {self.scheduler.name!r}")
+            from .jaxsched import JaxScheduler   # deferred: pulls in jax
+            self._jax_broker: Optional["JaxScheduler"] = JaxScheduler(
+                catalog, topology)
+        elif broker == "event":
+            if batch_window > 0:
+                raise ValueError(
+                    "batch_window only applies to broker='jax' "
+                    "(the event broker dispatches each SUBMIT immediately)")
+            self._jax_broker = None
+        else:
+            raise ValueError(f"unknown broker {broker!r} (want 'event'|'jax')")
+        self._batch_buf: list[Job] = []
+        self._flush_pending = False
 
         self._q: list[tuple[float, int, int, object]] = []
         self._seq = 0
         self.now = 0.0
         self._net_version = 0
+        self._net_last = 0.0
         self._transfers: dict[int, _Transfer] = {}
         self._inflight: dict[tuple[int, str], _Transfer] = {}
         self._tid = 0
-        # per-site CPU: FIFO queue of ready jobs + the running job
-        self._cpu_queue: dict[int, list[_JobState]] = {
-            s.site_id: [] for s in topology.sites
+        # -- vectorized transfer state, slot-indexed -----------------------
+        self._net_cap = 64
+        self._t_rem = np.zeros(self._net_cap)
+        self._t_rate = np.zeros(self._net_cap)
+        self._t_src = np.zeros(self._net_cap, np.intp)
+        self._t_reg = np.full(self._net_cap, -1, np.intp)
+        self._t_active = np.zeros(self._net_cap, bool)
+        self._t_obj: list[Optional[_Transfer]] = [None] * self._net_cap
+        self._free_slots = list(range(self._net_cap - 1, -1, -1))
+        self._nic_members: list[set[int]] = [set() for _ in topology.sites]
+        self._wan_members: list[set[int]] = [set() for _ in topology.wan_links]
+        self._nic_bw = np.array([l.bandwidth for l in topology.nic_links])
+        self._wan_bw = np.array([l.bandwidth for l in topology.wan_links])
+        # numpy mirrors of Link.active (simulator is the only writer); small
+        # integer counts, so the float64 mirror is exact
+        self._nic_act = np.array([float(l.active) for l in topology.nic_links])
+        self._wan_act = np.array([float(l.active) for l in topology.wan_links])
+        # per-site CPU: FIFO queue of ready jobs + the running job. Cancelled
+        # jobs stay queued as tombstones (done=True) and are skipped on pop.
+        self._cpu_queue: dict[int, collections.deque[_JobState]] = {
+            s.site_id: collections.deque() for s in topology.sites
         }
         self._running: dict[int, Optional[_JobState]] = {
             s.site_id: None for s in topology.sites
         }
         self._cpu_version: dict[int, int] = {s.site_id: 0 for s in topology.sites}
         self._cpu_last_update: dict[int, float] = {s.site_id: 0.0 for s in topology.sites}
-        self._site_jobs: dict[int, list[_JobState]] = {
-            s.site_id: [] for s in topology.sites
+        # ordered set (insertion-ordered dict) -> O(1) membership + removal
+        self._site_jobs: dict[int, dict[_JobState, None]] = {
+            s.site_id: {} for s in topology.sites
         }
 
         self.records: list[JobRecord] = []
@@ -171,36 +233,120 @@ class GridSimulator:
         job.submit_time = at
         self._push(at, SUBMIT, job)
 
+    def _check_site(self, site: int) -> None:
+        if not 0 <= site < len(self.topology.sites):
+            raise ValueError(
+                f"site {site} out of range (topology has "
+                f"{len(self.topology.sites)} sites)")
+
     def inject_failure(self, site: int, at: float, duration: float) -> None:
+        self._check_site(site)
         self._push(at, FAIL, site)
         self._push(at + duration, RECOVER, site)
 
     def inject_slowdown(self, site: int, at: float, duration: float,
                         factor: float = 0.1) -> None:
+        self._check_site(site)
         self._push(at, SLOW_START, (site, factor))
         self._push(at + duration, SLOW_END, (site, factor))
 
     # -- network -----------------------------------------------------------
+    #
+    # The fluid model: remaining bytes drain at `rate` = min over the
+    # transfer's links of bandwidth/active. `_net_advance` integrates all
+    # active transfers to `now`; `_net_rerate` refreshes the rates of the
+    # transfers named by the changed links and schedules the next completion
+    # wake-up (versioned: a stale NET event is a no-op).
+    def _slot_alloc(self, tr: _Transfer, size: float) -> None:
+        if not self._free_slots:
+            old = self._net_cap
+            self._net_cap = old * 2
+            self._t_rem = np.concatenate([self._t_rem, np.zeros(old)])
+            self._t_rate = np.concatenate([self._t_rate, np.zeros(old)])
+            self._t_src = np.concatenate([self._t_src, np.zeros(old, np.intp)])
+            self._t_reg = np.concatenate([self._t_reg, np.full(old, -1, np.intp)])
+            self._t_active = np.concatenate([self._t_active,
+                                             np.zeros(old, bool)])
+            self._t_obj.extend([None] * old)
+            self._free_slots.extend(range(self._net_cap - 1, old - 1, -1))
+        slot = self._free_slots.pop()
+        tr.slot = slot
+        src = tr.plan.src
+        # an inter-region transfer traverses [nic, wan] (see links_for)
+        reg = self.topology.region_of(src) if len(tr.links) > 1 else -1
+        self._t_rem[slot] = size
+        self._t_rate[slot] = 0.0
+        self._t_src[slot] = src
+        self._t_reg[slot] = reg
+        self._t_active[slot] = True
+        self._t_obj[slot] = tr
+        self._nic_members[src].add(slot)
+        self._nic_act[src] += 1.0
+        if reg >= 0:
+            self._wan_members[reg].add(slot)
+            self._wan_act[reg] += 1.0
+
+    def _slot_release(self, tr: _Transfer) -> None:
+        slot = tr.slot
+        src, reg = int(self._t_src[slot]), int(self._t_reg[slot])
+        self._t_active[slot] = False
+        self._t_rate[slot] = 0.0
+        self._t_rem[slot] = 0.0
+        self._t_obj[slot] = None
+        self._nic_members[src].discard(slot)
+        self._nic_act[src] -= 1.0
+        if reg >= 0:
+            self._wan_members[reg].discard(slot)
+            self._wan_act[reg] -= 1.0
+        self._free_slots.append(slot)
+        tr.slot = -1
+
     def _net_advance(self) -> None:
-        dt = self.now - getattr(self, "_net_last", 0.0)
+        dt = self.now - self._net_last
         if dt > 0:
-            for tr in self._transfers.values():
-                tr.remaining = max(0.0, tr.remaining - tr.rate * dt)
+            np.maximum(self._t_rem - self._t_rate * dt, 0.0, out=self._t_rem)
         self._net_last = self.now
 
-    def _net_rerate(self) -> None:
-        for tr in self._transfers.values():
-            tr.rate = min(l.share() for l in tr.links)
+    def _rate_slots(self, slots: set[int]) -> None:
+        """Recompute rate = min over links of bandwidth/active for ``slots``.
+        Pure function of current link occupancy, so re-rating a slot twice
+        (a transfer can sit in both a changed NIC and a changed WAN group)
+        is harmless."""
+        n = len(slots)
+        if n == 0:
+            return
+        if n <= 4:      # numpy call overhead dominates tiny groups
+            for sl in slots:
+                src, reg = self._t_src[sl], self._t_reg[sl]
+                r = self._nic_bw[src] / max(1.0, self._nic_act[src])
+                if reg >= 0:
+                    r = min(r, self._wan_bw[reg] / max(1.0, self._wan_act[reg]))
+                self._t_rate[sl] = r
+            return
+        idx = np.fromiter(slots, np.intp, n)
+        src = self._t_src[idx]
+        rate = self._nic_bw[src] / np.maximum(1.0, self._nic_act[src])
+        reg = self._t_reg[idx]
+        m = reg >= 0
+        if m.any():
+            wr = reg[m]
+            rate[m] = np.minimum(
+                rate[m], self._wan_bw[wr] / np.maximum(1.0, self._wan_act[wr]))
+        self._t_rate[idx] = rate
+
+    def _net_rerate(self, sites: tuple[int, ...] = (),
+                    regions: tuple[int, ...] = ()) -> None:
+        for s in sites:
+            self._rate_slots(self._nic_members[s])
+        for r in regions:
+            self._rate_slots(self._wan_members[r])
         self._net_version += 1
-        nxt = None
-        for tr in self._transfers.values():
-            if tr.rate <= 0:
-                continue
-            eta = self.now + tr.remaining / tr.rate
-            if nxt is None or eta < nxt:
-                nxt = eta
-        if nxt is not None:
-            self._push(nxt, NET, self._net_version)
+        if self._transfers:
+            live = self._t_rate > 0.0   # released slots are zeroed, so live ⊆ active
+            if live.any():
+                nxt = float(np.min(self.now
+                                   + self._t_rem[live] / self._t_rate[live]))
+                self._push(nxt, NET, self._net_version)
 
     def _start_transfer(self, plan: FetchPlan, js: _JobState) -> None:
         key = (plan.dst, plan.lfn)
@@ -220,8 +366,9 @@ class GridSimulator:
             self.topology.sites[plan.dst].used_storage += size  # reserve
         self.storage.pin(plan.src, plan.lfn)   # source can't be evicted mid-copy
         self._tid += 1
-        tr = _Transfer(self._tid, plan, size, links, waiters=[js])
+        tr = _Transfer(self._tid, plan, links, waiters=[js])
         self._transfers[tr.tid] = tr
+        self._slot_alloc(tr, size)
         if plan.store:
             self._inflight[key] = tr
         if plan.inter_region:
@@ -230,12 +377,15 @@ class GridSimulator:
             self.total_wan_bytes += size
         else:
             self.total_lan_bytes += size
-        self._net_rerate()
+        reg = int(self._t_reg[tr.slot])
+        self._net_rerate((plan.src,), (reg,) if reg >= 0 else ())
 
     def _finish_transfer(self, tr: _Transfer) -> None:
         plan = tr.plan
         self._transfers.pop(tr.tid, None)
         self._inflight.pop((plan.dst, plan.lfn), None)
+        src_site, reg = int(self._t_src[tr.slot]), int(self._t_reg[tr.slot])
+        self._slot_release(tr)
         for l in tr.links:
             l.active -= 1
         self.storage.unpin(plan.src, plan.lfn)
@@ -255,16 +405,23 @@ class GridSimulator:
                 js.temp_files.append(plan.lfn)
             js.pending_transfers -= 1
             self._fetch_next(js)
-        self._net_rerate()
+        self._net_rerate((src_site,), (reg,) if reg >= 0 else ())
 
     def _abort_transfers_touching(self, site: int) -> None:
         """Failure handling: drop transfers with src or dst at a failed site."""
         self._net_advance()
         dead = [t for t in self._transfers.values()
                 if t.plan.src == site or t.plan.dst == site]
+        sites_ch: set[int] = set()
+        regs_ch: set[int] = set()
         for tr in dead:
             self._transfers.pop(tr.tid, None)
             self._inflight.pop((tr.plan.dst, tr.plan.lfn), None)
+            sites_ch.add(int(self._t_src[tr.slot]))
+            reg = int(self._t_reg[tr.slot])
+            if reg >= 0:
+                regs_ch.add(reg)
+            self._slot_release(tr)
             for l in tr.links:
                 l.active -= 1
             if self.topology.sites[tr.plan.src].online or \
@@ -280,7 +437,7 @@ class GridSimulator:
                 js.missing.insert(0, tr.plan.lfn)
                 js.pending_transfers -= 1
                 self._fetch_next(js)
-        self._net_rerate()
+        self._net_rerate(tuple(sites_ch), tuple(regs_ch))
 
     # -- job lifecycle -----------------------------------------------------
     #
@@ -291,14 +448,35 @@ class GridSimulator:
     # evicted in the meantime is re-staged (another round). After 3 rounds
     # the job pins files as they arrive (anti-livelock escalation).
     def _schedule(self, job: Job) -> None:
-        site = self.scheduler.select_site(job)
+        self._place(job, self.scheduler.select_site(job))
+
+    def _place(self, job: Job, site: int) -> None:
         js = _JobState(job=job, site=site, remaining_ops=job.length)
-        self._site_jobs[site].append(js)
+        self._site_jobs[site][js] = None
         self.topology.sites[site].queued_work += job.length
         js.missing = [l for l in job.required if not self.storage.holds(site, l)]
         for lfn in job.required:
             self.storage.touch(site, lfn, self.now)
         self._fetch_next(js)
+
+    def _drain_submit_batch(self, first: Job) -> list[Job]:
+        """Batch broker: pull every SUBMIT event sharing this timestamp off
+        the head of the heap (stopping at any other event kind, which
+        preserves causality with failures/completions)."""
+        batch = [first]
+        q = self._q
+        while q and q[0][0] <= self.now and q[0][2] == SUBMIT:
+            batch.append(heapq.heappop(q)[3])  # type: ignore[arg-type]
+        return batch
+
+    def _dispatch_batch(self, batch: list[Job]) -> None:
+        if len(batch) == 1:
+            self._schedule(batch[0])
+            return
+        assert self._jax_broker is not None
+        sites = self._jax_broker.select_batch([j.required for j in batch])
+        for job, site in zip(batch, sites):
+            self._place(job, site)
 
     def _fetch_next(self, js: _JobState) -> None:
         """Files are accessed sequentially within a job (paper §4.1): one
@@ -341,7 +519,7 @@ class GridSimulator:
             return
         q = self._cpu_queue[site]
         while q:
-            js = q.pop(0)
+            js = q.popleft()
             if js.done:
                 continue
             missing = self._working_set_missing(js)
@@ -384,8 +562,7 @@ class GridSimulator:
         for lfn in js.pinned:
             self.storage.unpin(site, lfn)
         js.temp_files.clear()   # paper: temp buffer dropped after job completes
-        if js in self._site_jobs[site]:
-            self._site_jobs[site].remove(js)
+        self._site_jobs[site].pop(js, None)
         twin = js.twin
         if twin is not None and not twin.done:
             self._cancel_job(twin)
@@ -400,21 +577,18 @@ class GridSimulator:
         ))
 
     def _cancel_job(self, js: _JobState) -> None:
-        js.done = True
+        js.done = True       # tombstone: a queued copy is skipped on pop
         site = js.site
         self.topology.sites[site].queued_work -= js.job.length
         for lfn in js.pinned:
             self.storage.unpin(site, lfn)
         js.temp_files.clear()
-        if js in self._cpu_queue[site]:
-            self._cpu_queue[site].remove(js)
         if self._running[site] is js:
             self._cpu_advance(site)
             self._running[site] = None
             self._cpu_version[site] += 1
             self._maybe_start_cpu(site)
-        if js in self._site_jobs[site]:
-            self._site_jobs[site].remove(js)
+        self._site_jobs[site].pop(js, None)
 
     # -- failures / stragglers ----------------------------------------------
     def _fail_site(self, site: int) -> None:
@@ -425,12 +599,9 @@ class GridSimulator:
         st.online = False
         self._abort_transfers_touching(site)
         # lose non-master replicas (the SE is gone); masters are durable
-        for lfn in list(self.storage._contents[site]):
+        for lfn in self.storage.site_contents(site):
             if not self.catalog.is_master(lfn, site):
-                self.storage._pins[site].pop(lfn, None)
-                del self.storage._contents[site][lfn]
-                st.used_storage -= self.catalog.size(lfn)
-                self.catalog.remove_replica(lfn, site)
+                self.storage.lose(site, lfn)
         # resubmit every job that was at this site
         victims = list(self._site_jobs[site])
         self._site_jobs[site].clear()
@@ -469,7 +640,7 @@ class GridSimulator:
                          remaining_ops=job.length)
         twin.twin = js
         js.twin = twin
-        self._site_jobs[backup_site].append(twin)
+        self._site_jobs[backup_site][twin] = None
         self.topology.sites[backup_site].queued_work += job.length
         twin.missing = [l for l in job.required
                         if not self.storage.holds(backup_site, l)]
@@ -486,16 +657,34 @@ class GridSimulator:
             if kind == SUBMIT:
                 # submit_time was stamped at first submission; resubmitted
                 # jobs (failures) keep it so job_time spans the whole outage.
-                self._schedule(payload)  # type: ignore[arg-type]
+                if self._jax_broker is None:
+                    self._schedule(payload)  # type: ignore[arg-type]
+                elif self.batch_window > 0:
+                    # collect; dispatch together once the window closes
+                    # (batching adds latency — it never violates causality)
+                    self._batch_buf.append(payload)  # type: ignore[arg-type]
+                    if not self._flush_pending:
+                        self._flush_pending = True
+                        self._push(t + self.batch_window, FLUSH, None)
+                else:
+                    self._dispatch_batch(self._drain_submit_batch(payload))  # type: ignore[arg-type]
+            elif kind == FLUSH:
+                self._flush_pending = False
+                batch, self._batch_buf = self._batch_buf, []
+                if batch:
+                    self._dispatch_batch(batch)
             elif kind == NET:
                 if payload != self._net_version:
                     continue
                 self._net_advance()
-                done = [tr for tr in self._transfers.values()
-                        if tr.remaining <= _DONE_EPS]
-                for tr in done:
-                    self._finish_transfer(tr)
-                if not done:
+                done_idx = np.nonzero(self._t_active
+                                      & (self._t_rem <= _DONE_EPS))[0]
+                if done_idx.size:
+                    done = sorted((self._t_obj[i] for i in done_idx),
+                                  key=lambda tr: tr.tid)
+                    for tr in done:
+                        self._finish_transfer(tr)
+                else:
                     self._net_rerate()
             elif kind == CPU_DONE:
                 site, ver = payload  # type: ignore[misc]

@@ -132,8 +132,18 @@ class GridTopology:
 
         This is what HRS uses for "maximum bandwidth available" replica
         selection: the bottleneck link's equal share with one more flow.
+        (Open-coded ``min over links_for`` — this is the replica-selection
+        inner loop.)
         """
-        return min(link.share(link.active + 1) for link in self.links_for(src, dst))
+        nic = self.nic_links[src]
+        bw = nic.bandwidth / max(1, nic.active + 1)
+        sreg = self.sites[src].region_id
+        if sreg != self.sites[dst].region_id:
+            wan = self.wan_links[sreg]
+            wbw = wan.bandwidth / max(1, wan.active + 1)
+            if wbw < bw:
+                bw = wbw
+        return bw
 
     def is_inter_region(self, src: int, dst: int) -> bool:
         return not self.same_region(src, dst)

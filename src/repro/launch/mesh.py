@@ -11,22 +11,30 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    """Version-compat: ``jax.sharding.AxisType`` (and the ``axis_types``
+    kwarg of ``jax.make_mesh``) only exist on newer JAX. Older versions
+    default every axis to Auto anyway, so omitting the kwarg is equivalent."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (16, 16) = 256 chips, axes (data, model).
     Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 2, *, pod: int = 0):
     """Small mesh for CPU tests (requires >= n_data*n_model fake devices)."""
     if pod:
-        return jax.make_mesh((pod, n_data, n_model), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return _make_mesh((pod, n_data, n_model), ("pod", "data", "model"))
+    return _make_mesh((n_data, n_model), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple[str, ...]:

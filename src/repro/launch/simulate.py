@@ -31,7 +31,8 @@ def main() -> None:
                      wan_bandwidth=args.wan_mbps * 1e6 / 8,
                      lan_bandwidth=args.lan_mbps * 1e6 / 8,
                      n_jobs=args.jobs, seed=args.seed)
-    failures = [(3 + 7 * i, 2000.0 * (i + 1), 4000.0)
+    n_sites = args.regions * args.sites
+    failures = [((3 + 7 * i) % n_sites, 2000.0 * (i + 1), 4000.0)
                 for i in range(args.failures)]
     print(f"{'strategy':>14} {'avg_job_time':>13} {'inter/job':>10} "
           f"{'WAN GB':>8} {'makespan':>10}")

@@ -1,0 +1,66 @@
+"""Batch-dispatch broker (``broker="jax"``): SUBMIT events arriving within
+``batch_window`` of each other are placed by one jitted vectorized argmax
+(`jaxsched.select_sites_batch`) over a shared catalog/load snapshot."""
+
+import pytest
+
+from repro.core import GridConfig, run_experiment
+
+
+def test_batch_broker_completes_and_is_deterministic():
+    cfg = GridConfig(n_regions=2, sites_per_region=4)
+    a = run_experiment(cfg, strategy="hrs", n_jobs=80,
+                       broker="jax", arrival_burst=10)
+    b = run_experiment(cfg, strategy="hrs", n_jobs=80,
+                       broker="jax", arrival_burst=10)
+    assert a.completed_jobs == a.n_jobs == 80
+    assert a.avg_job_time == b.avg_job_time
+    assert a.avg_inter_comms == b.avg_inter_comms
+
+
+def test_batch_broker_singleton_batches_match_event_broker():
+    """With one job per batch the jax broker falls back to the sequential
+    python dispatch path, so results must equal the default broker's."""
+    cfg = GridConfig(n_regions=2, sites_per_region=4)
+    ev = run_experiment(cfg, strategy="hrs", n_jobs=40, broker="event")
+    jx = run_experiment(cfg, strategy="hrs", n_jobs=40, broker="jax")
+    assert ev.avg_job_time == jx.avg_job_time
+    assert ev.avg_inter_comms == jx.avg_inter_comms
+
+
+def test_batch_window_holds_then_flushes():
+    """batch_window > 0 delays dispatch (never schedules a job before its
+    own arrival): every record's start is at/after its submit time and all
+    jobs still complete."""
+    from repro.core import (GridSimulator, build_catalog, build_topology,
+                            generate_jobs)
+    cfg = GridConfig(n_regions=2, sites_per_region=4)
+    topo = build_topology(cfg)
+    cat = build_catalog(cfg, topo)
+    sim = GridSimulator(topo, cat, strategy="hrs", broker="jax",
+                        batch_window=300.0)
+    for info in cat.files.values():
+        sim.storage.bootstrap(info.master_site, info.lfn)
+    for j, job in enumerate(generate_jobs(cfg, 30)):
+        sim.submit_job(job, at=j * 60.0)
+    res = sim.run()
+    assert len(res.records) == 30
+    for r in res.records:
+        assert r.finish_time >= r.submit_time
+        assert r.job_time > 0
+
+
+def test_unknown_broker_rejected():
+    with pytest.raises(ValueError):
+        run_experiment(GridConfig(n_regions=2, sites_per_region=2),
+                       n_jobs=1, broker="nope")
+
+
+@pytest.mark.slow
+def test_batch_broker_2k_job_smoke():
+    """2k jobs in bursts of 50 through the jitted batch dispatcher."""
+    r = run_experiment(GridConfig(), strategy="hrs", n_jobs=2000,
+                       broker="jax", arrival_burst=50)
+    assert r.completed_jobs == r.n_jobs == 2000
+    assert r.avg_job_time > 0
+    assert r.makespan > 0

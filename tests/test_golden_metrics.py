@@ -1,0 +1,47 @@
+"""Golden-metrics regression for the event engine.
+
+``golden_metrics.json`` pins every fig4/fig5 cell (paper Table-1 grid) as
+produced by the pre-refactor engine. The rebuilt hot paths (vectorized
+fair-share network, incremental re-rating, deque/tombstone queues, bisect
+LRU) are required to be *bit-identical* — any drift here means the refactor
+changed simulation semantics, not just speed.
+
+Tier-1 checks a 6-cell subset; the full 18-cell grid runs under ``-m slow``.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.core import GridConfig, run_experiment
+
+GOLDEN = json.load(open(os.path.join(os.path.dirname(__file__),
+                                     "golden_metrics.json")))["metrics"]
+
+FAST_CELLS = ["fig4/hrs/100", "fig4/bhr/100", "fig4/lru/100",
+              "fig4/hrs/300", "fig4/bhr/300", "fig4/lru/300"]
+
+
+def _check(key: str) -> None:
+    _, strategy, n = key.split("/")
+    n = int(n)
+    cfg = GridConfig(n_jobs=n) if key.startswith("fig5") else GridConfig()
+    r = run_experiment(cfg, strategy=strategy, n_jobs=n)
+    g = GOLDEN[key]
+    assert r.avg_job_time == g["avg_job_time"], key
+    assert r.avg_inter_comms == g["avg_inter_comms"], key
+    assert r.total_wan_gb == g["total_wan_gb"], key
+    assert r.makespan == g["makespan"], key
+    assert r.completed_jobs == n, key
+
+
+@pytest.mark.parametrize("key", FAST_CELLS)
+def test_golden_fig4_subset(key):
+    _check(key)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("key", sorted(set(GOLDEN) - set(FAST_CELLS)))
+def test_golden_full_grid(key):
+    _check(key)

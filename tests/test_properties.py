@@ -1,5 +1,9 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 from hypothesis import given, settings
 
@@ -108,7 +112,7 @@ def test_hrs_region_priority_property(data):
         si = data.draw(st.integers(0, topo.n_sites - 1))
         if not cat.has_replica(f"f{fi}", si):
             cat.add_replica(f"f{fi}", si)
-            stor._contents[si][f"f{fi}"] = 0.0
+            stor.bootstrap(si, f"f{fi}", now=0.0)
     strat = make_strategy("hrs", cat, topo, stor)
     fi = data.draw(st.integers(0, 7))
     dst = data.draw(st.integers(0, topo.n_sites - 1))

@@ -1,0 +1,60 @@
+"""Scheduling under site failure (the ShortestTransfer crash regression).
+
+Seed bug: ``ShortestTransferScheduler.cost`` did ``max()`` over the online
+holders of a file — when the only holder (the master) was offline the list
+was empty and ``max()`` raised ValueError. Masters are durable (the paper
+assumes the master site always has a safe copy), so they must stay
+fetchable while their site is down.
+"""
+
+import pytest
+
+from repro.core import (GridTopology, Job, ReplicaCatalog, StorageState,
+                        make_scheduler, run_experiment, GridConfig)
+
+GB = 1e9
+
+
+def build():
+    topo = GridTopology(2, 2, lan_bandwidth=125e6, wan_bandwidth=1.25e6,
+                        storage_capacity=100 * GB)
+    cat = ReplicaCatalog()
+    st = StorageState(cat, topo)
+    return topo, cat, st
+
+
+def test_shortest_transfer_sole_holder_offline():
+    topo, cat, st = build()
+    cat.register_file("f", 1 * GB, 0)     # master (sole copy) at site 0
+    st.bootstrap(0, "f")
+    topo.sites[0].online = False          # every holder of "f" is offline
+    sched = make_scheduler("shortesttransfer", cat, topo)
+    site = sched.select_site(Job(0, 0, ["f"], length=1e9))
+    assert site in (1, 2, 3)              # no crash, an online site chosen
+
+
+def test_shortest_transfer_prefers_replica_holder():
+    topo, cat, st = build()
+    cat.register_file("big", 10 * GB, 0)
+    st.bootstrap(0, "big")
+    sched = make_scheduler("shortesttransfer", cat, topo)
+    # site 0 needs no transfer at all -> minimal cost
+    assert sched.select_site(Job(0, 0, ["big"], length=1e9)) == 0
+
+
+def test_shortest_transfer_survives_injected_failure():
+    """End-to-end: mid-run site failure with the shortesttransfer policy —
+    the seed engine crashed inside cost(); now every job must complete."""
+    cfg = GridConfig(n_regions=2, sites_per_region=3)
+    res = run_experiment(cfg, scheduler="shortesttransfer", strategy="hrs",
+                         n_jobs=60, failures=[(0, 500.0, 4000.0),
+                                              (4, 2500.0, 3000.0)])
+    assert res.completed_jobs == res.n_jobs == 60
+    assert res.avg_job_time > 0
+
+
+def test_dataaware_survives_injected_failure():
+    res = run_experiment(GridConfig(n_regions=2, sites_per_region=3),
+                         scheduler="dataaware", strategy="hrs", n_jobs=60,
+                         failures=[(1, 1000.0, 5000.0)])
+    assert res.completed_jobs == res.n_jobs == 60
