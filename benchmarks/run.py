@@ -2,6 +2,12 @@
 µbenches. Prints ``name,us_per_call,derived`` CSV rows and writes
 ``results/bench_*.csv`` detail files.
 
+Every simulation cell is config-driven: a figure is a ``sweep`` of the
+``paper_baseline`` scenario (``repro.core.scenarios``) along one axis
+through ``repro.launch.experiments``; the scale sweep reuses the
+``bulk_diana`` scenario. The full beyond-paper scenario registry runs via
+``python -m repro.launch.experiments --all`` (see docs/SCENARIOS.md).
+
 Paper figures (all on the Table-1 grid: 4 regions x 13 sites, 10 GB SEs,
 1000/10 Mbps LAN/WAN, 5 job types x 12 x 500 MB files):
 
@@ -20,6 +26,7 @@ mode on CPU).
 from __future__ import annotations
 
 import csv
+import dataclasses
 import json
 import os
 import time
@@ -32,6 +39,11 @@ STRATS = ("hrs", "bhr", "lru")
 def _cfg(**kw):
     from repro.core import GridConfig
     return GridConfig(**kw)
+
+
+def _baseline():
+    from repro.core import SCENARIOS
+    return SCENARIOS["paper_baseline"]
 
 
 def _row(name: str, us: float, derived: str) -> None:
@@ -47,16 +59,13 @@ def _write_csv(name: str, header: list[str], rows: list[list]) -> None:
 
 
 def fig4_avg_job_time_vs_njobs() -> None:
-    from repro.core import run_experiment
-    rows = []
+    from repro.launch.experiments import sweep
+    ns = (100, 200, 300, 400, 500)
     t0 = time.perf_counter()
-    for n in (100, 200, 300, 400, 500):
-        vals = {}
-        for s in STRATS:
-            r = run_experiment(_cfg(), strategy=s, n_jobs=n)
-            vals[s] = r.avg_job_time
-        rows.append([n] + [round(vals[s], 1) for s in STRATS])
-    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    res = sweep(_baseline(), axis="n_jobs", values=ns, strategies=STRATS)
+    us = (time.perf_counter() - t0) * 1e6 / len(ns)
+    rows = [[n] + [round(res[(n, s)].avg_job_time, 1) for s in STRATS]
+            for n in ns]
     _write_csv("bench_fig4.csv", ["n_jobs", *STRATS], rows)
     last = rows[-1]
     gain = 100.0 * (last[2] - last[1]) / last[2]
@@ -64,11 +73,11 @@ def fig4_avg_job_time_vs_njobs() -> None:
 
 
 def fig5_avg_job_time_1000() -> None:
-    from repro.core import run_experiment
+    from repro.launch.experiments import sweep
     t0 = time.perf_counter()
-    vals = {s: run_experiment(_cfg(n_jobs=1000), strategy=s, n_jobs=1000)
-            .avg_job_time for s in STRATS}
+    res = sweep(_baseline(), axis="n_jobs", values=(1000,), strategies=STRATS)
     us = (time.perf_counter() - t0) * 1e6
+    vals = {s: res[(1000, s)].avg_job_time for s in STRATS}
     _write_csv("bench_fig5.csv", ["strategy", "avg_job_time_s"],
                [[s, round(vals[s], 1)] for s in STRATS])
     gain = 100.0 * (vals["bhr"] - vals["hrs"]) / vals["bhr"]
@@ -77,11 +86,11 @@ def fig5_avg_job_time_1000() -> None:
 
 
 def fig6_inter_communications() -> None:
-    from repro.core import run_experiment
+    from repro.launch.experiments import sweep
     t0 = time.perf_counter()
-    vals = {s: run_experiment(_cfg(), strategy=s, n_jobs=500)
-            .avg_inter_comms for s in STRATS}
+    res = sweep(_baseline(), axis="n_jobs", values=(500,), strategies=STRATS)
     us = (time.perf_counter() - t0) * 1e6
+    vals = {s: res[(500, s)].avg_inter_comms for s in STRATS}
     _write_csv("bench_fig6.csv", ["strategy", "avg_inter_comms"],
                [[s, round(vals[s], 3)] for s in STRATS])
     _row("fig6_inter_comms", us,
@@ -89,17 +98,13 @@ def fig6_inter_communications() -> None:
 
 
 def fig7_wan_bandwidth_sweep() -> None:
-    from repro.core import run_experiment
-    rows = []
+    from repro.launch.experiments import sweep
+    mbpss = (10, 50, 100, 500, 1000)
     t0 = time.perf_counter()
-    for mbps in (10, 50, 100, 500, 1000):
-        vals = {}
-        for s in STRATS:
-            r = run_experiment(_cfg(wan_bandwidth=mbps * 1e6 / 8),
-                               strategy=s, n_jobs=500)
-            vals[s] = r.avg_job_time
-        rows.append([mbps] + [round(vals[s], 1) for s in STRATS])
-    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    res = sweep(_baseline(), axis="wan_mbps", values=mbpss, strategies=STRATS)
+    us = (time.perf_counter() - t0) * 1e6 / len(mbpss)
+    rows = [[m] + [round(res[(m, s)].avg_job_time, 1) for s in STRATS]
+            for m in mbpss]
     _write_csv("bench_fig7.csv", ["wan_mbps", *STRATS], rows)
     lo, hi = rows[0], rows[-1]
     _row("fig7_wan_sweep", us,
@@ -109,12 +114,13 @@ def fig7_wan_bandwidth_sweep() -> None:
 
 def scheduler_ablation() -> None:
     """Beyond-paper: hold replication = HRS, vary the scheduler."""
-    from repro.core import run_experiment
+    from repro.launch.experiments import sweep
     scheds = ("dataaware", "random", "leastloaded", "shortesttransfer")
+    base = dataclasses.replace(_baseline(), n_jobs=300)
     t0 = time.perf_counter()
-    vals = {s: run_experiment(_cfg(), scheduler=s, strategy="hrs",
-                              n_jobs=300).avg_job_time for s in scheds}
+    res = sweep(base, axis="scheduler", values=scheds, strategies=("hrs",))
     us = (time.perf_counter() - t0) * 1e6
+    vals = {s: res[(s, "hrs")].avg_job_time for s in scheds}
     _write_csv("bench_sched_ablation.csv", ["scheduler", "avg_job_time_s"],
                [[s, round(vals[s], 1)] for s in scheds])
     _row("scheduler_ablation", us,
@@ -124,10 +130,11 @@ def scheduler_ablation() -> None:
 def eviction_phase_ablation() -> None:
     """Isolate the paper's novel two-phase eviction: HRS vs HRS with plain
     LRU eviction (everything else identical)."""
-    from repro.core import run_experiment
+    from repro.launch.experiments import sweep
     t0 = time.perf_counter()
-    full = run_experiment(_cfg(), strategy="hrs", n_jobs=500)
-    single = run_experiment(_cfg(), strategy="hrs_singlephase", n_jobs=500)
+    res = sweep(_baseline(), axis="n_jobs", values=(500,),
+                strategies=("hrs", "hrs_singlephase"))
+    full, single = res[(500, "hrs")], res[(500, "hrs_singlephase")]
     us = (time.perf_counter() - t0) * 1e6
     gain = 100 * (single.avg_job_time - full.avg_job_time) / single.avg_job_time
     _write_csv("bench_eviction_ablation.csv",
@@ -185,23 +192,23 @@ def failover_recovery() -> None:
 
 def scale_sweep() -> None:
     """Beyond-paper: engine scalability sweep (2k/5k/10k jobs, multi-seed)
-    with burst arrivals dispatched through the jitted batch broker. Writes
-    machine-readable ``results/BENCH_scale.json`` alongside the CSVs."""
-    from repro.core import run_experiment
+    with burst arrivals dispatched through the jitted batch broker (the
+    ``bulk_diana`` scenario at scale). Writes machine-readable
+    ``results/BENCH_scale.json`` alongside the CSVs."""
+    from repro.core import SCENARIOS
+    from repro.launch.experiments import run_scenario
+    bulk = SCENARIOS["bulk_diana"]
     rows = []
     t0 = time.perf_counter()
     for n, seeds in ((2000, (0, 1, 2)), (5000, (0, 1)), (10000, (0, 1))):
-        for seed in seeds:
-            t1 = time.perf_counter()
-            r = run_experiment(_cfg(seed=seed), strategy="hrs", n_jobs=n,
-                               broker="jax", arrival_burst=50)
+        for row in run_scenario(bulk, n_jobs=n, seeds=seeds):
             rows.append({
-                "n_jobs": n, "seed": seed,
-                "wall_s": round(time.perf_counter() - t1, 3),
-                "avg_job_time_s": r.avg_job_time,
-                "avg_inter_comms": r.avg_inter_comms,
-                "completed_jobs": r.completed_jobs,
-                "makespan_s": r.makespan,
+                "n_jobs": row["n_jobs"], "seed": row["seed"],
+                "wall_s": row["wall_s"],
+                "avg_job_time_s": row["avg_job_time_s"],
+                "avg_inter_comms": row["avg_inter_comms"],
+                "completed_jobs": row["completed_jobs"],
+                "makespan_s": row["makespan_s"],
             })
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, "BENCH_scale.json"), "w") as f:

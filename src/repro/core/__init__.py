@@ -4,6 +4,9 @@ jit-compiled dispatch path used by the training/serving runtime."""
 
 from .catalog import FileInfo, ReplicaCatalog
 from .metrics import ExperimentResult, run_experiment
+from .scenarios import (ChurnSpec, SCENARIOS, ScenarioSpec, arrival_schedule,
+                        get_scenario, injections, register_scenario,
+                        to_grid_config)
 from .replica import (BHRStrategy, FetchPlan, HRSSinglePhaseStrategy,
                       HRSStrategy, LRUStrategy, NoReplicationStrategy,
                       ReplicaStrategy, StorageState, STRATEGIES,
@@ -18,6 +21,8 @@ from .workload import (GB, MB, GridConfig, build_catalog, build_topology,
 
 __all__ = [
     "FileInfo", "ReplicaCatalog", "ExperimentResult", "run_experiment",
+    "ChurnSpec", "SCENARIOS", "ScenarioSpec", "arrival_schedule",
+    "get_scenario", "injections", "register_scenario", "to_grid_config",
     "BHRStrategy", "FetchPlan", "HRSSinglePhaseStrategy", "HRSStrategy",
     "LRUStrategy",
     "NoReplicationStrategy", "ReplicaStrategy", "StorageState", "STRATEGIES",

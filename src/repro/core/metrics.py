@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 from .simulator import GridSimulator, SimResult
 from .workload import GridConfig, build_catalog, build_topology, generate_jobs
@@ -33,12 +34,26 @@ def run_experiment(
     broker: str = "event",
     batch_window: float = 0.0,
     arrival_burst: int = 1,
+    arrival_times: Sequence[float] | None = None,
 ) -> ExperimentResult:
     """One full simulation run (the unit behind every paper figure).
 
+    Builds the grid described by ``cfg``, bootstraps master replicas,
+    submits the generated workload, and runs the discrete-event engine to
+    completion. ``scheduler``/``strategy`` name entries in the
+    :data:`repro.core.SCHEDULERS` / :data:`repro.core.STRATEGIES`
+    registries.
+
+    Arrivals: by default job ``j`` is submitted at ``j * cfg.interarrival``.
     ``arrival_burst`` > 1 submits jobs in bursts of that size (same mean
-    arrival rate); combined with ``broker="jax"`` each burst is dispatched as
-    one jitted batch decision.
+    arrival rate); combined with ``broker="jax"`` each burst is dispatched
+    as one jitted batch decision. ``arrival_times`` (seconds, one per job)
+    overrides both — this is how the scenario engine injects Poisson /
+    flash-crowd / diurnal arrival processes.
+
+    ``failures`` is a list of ``(site, at, duration)`` outages and
+    ``slowdowns`` a list of ``(site, at, duration, factor)`` stragglers;
+    see :mod:`repro.fault.failures` for spec-driven generation.
     """
     topology = build_topology(cfg)
     catalog = build_catalog(cfg, topology)
@@ -48,8 +63,14 @@ def run_experiment(
     for info in catalog.files.values():
         sim.storage.bootstrap(info.master_site, info.lfn)
     jobs = generate_jobs(cfg, n_jobs)
+    if arrival_times is not None and len(arrival_times) < len(jobs):
+        raise ValueError(f"arrival_times has {len(arrival_times)} entries "
+                         f"for {len(jobs)} jobs")
     for j, job in enumerate(jobs):
-        at = (j // arrival_burst) * cfg.interarrival * arrival_burst
+        if arrival_times is not None:
+            at = float(arrival_times[j])
+        else:
+            at = (j // arrival_burst) * cfg.interarrival * arrival_burst
         sim.submit_job(job, at=at)
     for site, at, dur in failures or []:
         sim.inject_failure(site, at, dur)

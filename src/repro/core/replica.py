@@ -347,6 +347,11 @@ class NoReplicationStrategy(ReplicaStrategy):
                          inter_region=self.topology.is_inter_region(src, dst))
 
 
+#: Replication-strategy registry, keyed by each strategy's ``name``
+#: attribute: ``hrs`` (the paper's contribution), ``hrs_singlephase``
+#: (eviction ablation), ``bhr``, ``lru``, ``noreplication``. These names are
+#: what ``GridSimulator``, ``run_experiment`` and ``ScenarioSpec.strategy``
+#: accept.
 STRATEGIES: dict[str, type[ReplicaStrategy]] = {
     c.name: c for c in (HRSStrategy, HRSSinglePhaseStrategy, BHRStrategy,
                         LRUStrategy, NoReplicationStrategy)
@@ -355,4 +360,10 @@ STRATEGIES: dict[str, type[ReplicaStrategy]] = {
 
 def make_strategy(name: str, catalog: ReplicaCatalog, topology: GridTopology,
                   storage: StorageState) -> ReplicaStrategy:
+    """Instantiate a replication strategy from :data:`STRATEGIES` by name.
+
+    Strategies are pure decision functions over the shared ``catalog`` /
+    ``topology`` / ``storage`` state — the simulator executes the
+    :class:`FetchPlan` they return. Raises ``KeyError`` for unknown names.
+    """
     return STRATEGIES[name](catalog, topology, storage)

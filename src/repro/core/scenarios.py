@@ -1,0 +1,364 @@
+"""Declarative experiment scenarios + the named-scenario registry.
+
+The paper evaluates one fixed world: a 4-region x 13-site two-level grid
+with uniform links and a steady uniform arrival stream. Related work shows
+the interesting regimes live elsewhere — DIANA-style network-aware
+scheduling (arXiv:0707.0862) on heterogeneous fabrics, bulk scheduling
+(arXiv:cs/0602026) under bursty submission. A :class:`ScenarioSpec` captures
+*everything* that defines one experiment — topology shape, per-tier
+bandwidth/storage, arrival process, workload mix, failure injections,
+scheduler + replication strategy + broker, seeds — as a frozen, JSON
+round-trippable dataclass, and :data:`SCENARIOS` registers named instances
+(the paper baseline plus deep hierarchies, fat-region fabrics, flash-crowd /
+diurnal / bulk arrivals, site churn, and a cache-starved regime).
+
+Run them with ``python -m repro.launch.experiments --scenario NAME`` (or
+``--all``); see ``docs/SCENARIOS.md`` for the catalog and how to add one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import random as _random
+
+from .replica import STRATEGIES
+from .scheduler import SCHEDULERS
+from .workload import GridConfig
+
+ARRIVALS = ("uniform", "poisson", "flash_crowd", "diurnal")
+BROKERS = ("event", "jax")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnSpec:
+    """Declarative site-churn regime for the grid simulator.
+
+    ``n_failures`` outages are spread over ``window`` (seconds of sim time);
+    each takes a distinct site offline for a duration drawn exponentially
+    around ``mean_downtime_s``. Expansion into concrete ``(site, at,
+    duration)`` events is :func:`repro.fault.failures.churn_schedule`,
+    deterministic under a seed.
+    """
+
+    n_failures: int = 0
+    window: tuple[float, float] = (0.0, 0.0)
+    mean_downtime_s: float = 4000.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """Everything that defines one grid experiment, declaratively.
+
+    Field groups (defaults reproduce the paper's Table-1 world exactly —
+    ``to_grid_config`` of the default spec equals ``GridConfig()``):
+
+    *Topology* — ``tier_fanouts`` is the tier tree, e.g. ``(4, 13)`` (the
+    paper) or ``(2, 3, 3, 3)`` (a 5-tier hierarchy); ``uplink_mbps`` gives
+    one uplink bandwidth per internal level, top-down; ``lan_mbps`` is the
+    site NIC. ``uplink_scale`` holds ``(level, node, factor)`` bandwidth
+    multipliers (fat regions), ``storage_scale`` holds ``(region, factor)``
+    SE-capacity multipliers, and ``storage_gb`` the base SE size.
+
+    *Workload* — catalog size/granularity, per-job file count, job mix and
+    length, Zipf skew of the per-job file draw (``None`` = fixed sets).
+
+    *Arrivals* — ``arrival`` is one of ``uniform | poisson | flash_crowd |
+    diurnal`` (see :func:`arrival_schedule`); ``arrival_burst`` > 1 submits
+    uniform arrivals in bursts of that size (DIANA-style bulk submission,
+    usually with ``broker="jax"``).
+
+    *Injections* — ``churn`` expands into deterministic ``(site, at,
+    duration)`` failures via :func:`repro.fault.failures.churn_schedule`;
+    ``slowdowns`` are literal ``(site, at, duration, factor)`` stragglers.
+
+    *Engine* — scheduler / replication strategy / broker registry names and
+    the seeds to run (one simulation per seed).
+
+    Specs are frozen; derive variants with ``dataclasses.replace`` and
+    serialize with :meth:`to_dict` / :meth:`from_dict` (exact round-trip,
+    JSON-safe).
+    """
+
+    name: str
+    description: str = ""
+    probes: str = ""                 # paper figure / related-work regime
+    # -- topology ----------------------------------------------------------
+    tier_fanouts: tuple[int, ...] = (4, 13)
+    lan_mbps: float = 1000.0
+    uplink_mbps: tuple[float, ...] = (10.0,)
+    uplink_scale: tuple[tuple[int, int, float], ...] = ()
+    storage_gb: float = 10.0
+    storage_scale: tuple[tuple[int, float], ...] = ()
+    # -- workload ----------------------------------------------------------
+    n_jobs: int = 500
+    n_job_types: int = 5
+    files_per_job: int = 12
+    file_size_mb: float = 500.0
+    catalog_gb: float = 50.0
+    job_length: float = 60e9
+    zipf_alpha: float | None = 0.9
+    # -- arrival process ---------------------------------------------------
+    arrival: str = "uniform"
+    interarrival_s: float = 60.0
+    arrival_burst: int = 1
+    crowd_at: float = 0.5            # flash_crowd: burst start (job fraction)
+    crowd_frac: float = 0.3          # flash_crowd: fraction of jobs in burst
+    crowd_factor: float = 30.0       # flash_crowd: rate multiplier in burst
+    diurnal_amplitude: float = 0.8   # diurnal: rate swing, 0..1
+    diurnal_period_jobs: int = 200   # diurnal: jobs per day-cycle
+    # -- injections --------------------------------------------------------
+    churn: ChurnSpec = ChurnSpec()
+    slowdowns: tuple[tuple[int, float, float, float], ...] = ()
+    # -- engine ------------------------------------------------------------
+    scheduler: str = "dataaware"
+    strategy: str = "hrs"
+    broker: str = "event"
+    batch_window_s: float = 0.0
+    seeds: tuple[int, ...] = (0,)
+
+    def __post_init__(self) -> None:
+        if len(self.tier_fanouts) < 2:
+            raise ValueError(f"{self.name}: need >=2 tier levels")
+        if len(self.uplink_mbps) != len(self.tier_fanouts) - 1:
+            raise ValueError(
+                f"{self.name}: {len(self.tier_fanouts)}-level fanouts need "
+                f"{len(self.tier_fanouts) - 1} uplink bandwidths, got "
+                f"{len(self.uplink_mbps)}")
+        if self.arrival not in ARRIVALS:
+            raise ValueError(f"{self.name}: unknown arrival {self.arrival!r} "
+                             f"(want one of {ARRIVALS})")
+        if self.scheduler not in SCHEDULERS:
+            raise ValueError(f"{self.name}: unknown scheduler "
+                             f"{self.scheduler!r} (want one of "
+                             f"{sorted(SCHEDULERS)})")
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"{self.name}: unknown strategy "
+                             f"{self.strategy!r} (want one of "
+                             f"{sorted(STRATEGIES)})")
+        if self.broker not in BROKERS:
+            raise ValueError(f"{self.name}: unknown broker {self.broker!r}")
+        if not self.seeds:
+            raise ValueError(f"{self.name}: need at least one seed")
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def n_sites(self) -> int:
+        n = 1
+        for f in self.tier_fanouts:
+            n *= f
+        return n
+
+    # -- serialization -----------------------------------------------------
+    def to_dict(self) -> dict:
+        """JSON-safe dict; exact inverse of :meth:`from_dict`."""
+        d = dataclasses.asdict(self)
+        d["churn"] = dataclasses.asdict(self.churn)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ScenarioSpec":
+        d = dict(d)
+        churn = d.get("churn", {})
+        if not isinstance(churn, ChurnSpec):
+            churn = dict(churn)
+            churn["window"] = tuple(churn.get("window", (0.0, 0.0)))
+            churn = ChurnSpec(**churn)
+        d["churn"] = churn
+        for key in ("tier_fanouts", "uplink_mbps", "seeds"):
+            if key in d:
+                d[key] = tuple(d[key])
+        for key in ("uplink_scale", "storage_scale", "slowdowns"):
+            if key in d:
+                d[key] = tuple(tuple(row) for row in d[key])
+        return cls(**d)
+
+
+def to_grid_config(spec: ScenarioSpec, seed: int | None = None) -> GridConfig:
+    """Lower a spec's topology + workload fields to a :class:`GridConfig`.
+
+    For two-level trees this emits the classic ``n_regions x
+    sites_per_region`` form, so the default spec lowers to exactly
+    ``GridConfig()`` (the golden-metrics baseline path).
+    """
+    mbps = 1e6 / 8
+    two_level = len(spec.tier_fanouts) == 2
+    return GridConfig(
+        n_regions=spec.tier_fanouts[0] if two_level else 4,
+        sites_per_region=spec.tier_fanouts[1] if two_level else 13,
+        storage_capacity=spec.storage_gb * 1e9,
+        lan_bandwidth=spec.lan_mbps * mbps,
+        wan_bandwidth=spec.uplink_mbps[0] * mbps,
+        n_jobs=spec.n_jobs,
+        n_job_types=spec.n_job_types,
+        files_per_job=spec.files_per_job,
+        file_size=spec.file_size_mb * 1e6,
+        total_file_bytes=spec.catalog_gb * 1e9,
+        job_length=spec.job_length,
+        interarrival=spec.interarrival_s,
+        zipf_alpha=spec.zipf_alpha,
+        seed=spec.seeds[0] if seed is None else seed,
+        tier_fanouts=None if two_level else spec.tier_fanouts,
+        uplink_bandwidths=(None if two_level
+                           else tuple(u * mbps for u in spec.uplink_mbps)),
+        uplink_scale=spec.uplink_scale,
+        storage_scale=spec.storage_scale,
+    )
+
+
+def arrival_schedule(spec: ScenarioSpec, n_jobs: int,
+                     seed: int = 0) -> list[float] | None:
+    """Submit times (seconds, one per job) for the spec's arrival process.
+
+    Returns ``None`` for ``uniform`` so the runner takes ``run_experiment``'s
+    default arrival path (bit-identical to the paper baseline, including
+    ``arrival_burst`` bulk submission). ``poisson`` and ``diurnal`` keep the
+    baseline's mean rate ``1 / interarrival_s`` so those scenarios stay
+    load-comparable; ``flash_crowd`` deliberately does not — the crowd adds
+    extra load on top of the steady stream (with the default knobs the
+    realized mean rate is ~1.4x the base). Deterministic under ``seed``.
+    """
+    ia = spec.interarrival_s
+    if spec.arrival == "uniform":
+        return None
+    if spec.arrival == "poisson":
+        rng = _random.Random(seed ^ 0xA441)
+        t, out = 0.0, []
+        for _ in range(n_jobs):
+            out.append(t)
+            t += rng.expovariate(1.0 / ia)
+        return out
+    if spec.arrival == "flash_crowd":
+        # steady stream, except a contiguous block of jobs arrives at
+        # crowd_factor x the base rate (a release / reprocessing campaign)
+        lo = int(n_jobs * spec.crowd_at)
+        hi = min(n_jobs, lo + max(1, int(n_jobs * spec.crowd_frac)))
+        t, out = 0.0, []
+        for j in range(n_jobs):
+            out.append(t)
+            t += ia / spec.crowd_factor if lo <= j < hi else ia
+        return out
+    if spec.arrival == "diurnal":
+        # sinusoidally modulated gaps: "daytime" jobs arrive up to
+        # (1 - amplitude) x faster, "night" up to (1 + amplitude) x slower
+        t, out = 0.0, []
+        for j in range(n_jobs):
+            out.append(t)
+            phase = 2.0 * math.pi * j / max(1, spec.diurnal_period_jobs)
+            t += ia * (1.0 + spec.diurnal_amplitude * math.sin(phase))
+        return out
+    raise AssertionError(f"unhandled arrival {spec.arrival!r}")
+
+
+def injections(spec: ScenarioSpec, seed: int = 0) -> tuple[
+        list[tuple[int, float, float]],
+        list[tuple[int, float, float, float]]]:
+    """Expand the spec's fault fields into run_experiment's
+    ``(failures, slowdowns)`` lists."""
+    from repro.fault.failures import churn_schedule  # deferred: pulls in jax
+    failures = churn_schedule(spec.churn, spec.n_sites, seed=seed)
+    return failures, [tuple(s) for s in spec.slowdowns]
+
+
+# --------------------------------------------------------------------------
+# the registry
+# --------------------------------------------------------------------------
+SCENARIOS: dict[str, ScenarioSpec] = {}
+
+
+def register_scenario(spec: ScenarioSpec) -> ScenarioSpec:
+    """Add a spec to :data:`SCENARIOS` (name must be unused)."""
+    if spec.name in SCENARIOS:
+        raise ValueError(f"scenario {spec.name!r} already registered")
+    SCENARIOS[spec.name] = spec
+    return spec
+
+
+def get_scenario(name: str) -> ScenarioSpec:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; registered: "
+                       f"{', '.join(sorted(SCENARIOS))}") from None
+
+
+register_scenario(ScenarioSpec(
+    name="paper_baseline",
+    description="The paper's Table-1 world: 4 regions x 13 sites, 10 GB "
+                "SEs, 1000/10 Mbps LAN/WAN, 500 jobs at a steady 60 s "
+                "spacing, data-aware scheduler + HRS.",
+    probes="paper fig4-fig7 (golden-metrics baseline)",
+))
+
+register_scenario(ScenarioSpec(
+    name="deep_4tier",
+    description="A 4-tier hierarchy (2 clusters x 4 groups x 7 sites) with "
+                "a 10 Mbps top uplink over 100 Mbps group uplinks: locality "
+                "is two-layered, so eviction mistakes cost more.",
+    probes="hierarchy depth beyond the paper's 2-level grid",
+    tier_fanouts=(2, 4, 7),
+    uplink_mbps=(10.0, 100.0),
+))
+
+register_scenario(ScenarioSpec(
+    name="deep_5tier",
+    description="A 5-tier hierarchy (2 x 3 x 3 x 3 = 54 sites) with "
+                "bandwidth decreasing up the tree (200/50/10 Mbps).",
+    probes="hierarchy depth; tier-graded bandwidth",
+    tier_fanouts=(2, 3, 3, 3),
+    uplink_mbps=(10.0, 50.0, 200.0),
+))
+
+register_scenario(ScenarioSpec(
+    name="fat_region",
+    description="Paper grid but region 0's WAN uplink is 10x fatter "
+                "(100 Mbps): a well-connected Tier-1-like center among "
+                "thin regions.",
+    probes="DIANA network-aware scheduling regime (arXiv:0707.0862)",
+    uplink_scale=((1, 0, 10.0),),
+))
+
+register_scenario(ScenarioSpec(
+    name="flash_crowd",
+    description="Steady stream, then 30% of all jobs arrive at 30x the "
+                "base rate mid-run (data release / reprocessing campaign).",
+    probes="queue + WAN saturation transients",
+    arrival="flash_crowd",
+))
+
+register_scenario(ScenarioSpec(
+    name="diurnal",
+    description="Sinusoidally modulated arrivals (80% rate swing, 200-job "
+                "day cycle): replicas staged during the quiet phase serve "
+                "the busy phase.",
+    probes="time-varying load; cache warm-up dynamics",
+    arrival="diurnal",
+))
+
+register_scenario(ScenarioSpec(
+    name="bulk_diana",
+    description="DIANA-style bulk submission: jobs arrive in bursts of 50 "
+                "and each burst is placed by one jitted batch decision "
+                "(broker='jax').",
+    probes="bulk scheduling (arXiv:cs/0602026); jitted broker path",
+    arrival_burst=50,
+    broker="jax",
+))
+
+register_scenario(ScenarioSpec(
+    name="site_churn",
+    description="Paper grid under churn: 6 site outages (mean 4000 s) "
+                "spread over the first 30000 s; queued jobs resubmit, "
+                "replicas are lost and re-staged.",
+    probes="fault-tolerance axis; replica durability",
+    churn=ChurnSpec(n_failures=6, window=(1000.0, 30000.0),
+                    mean_downtime_s=4000.0),
+))
+
+register_scenario(ScenarioSpec(
+    name="cache_starved",
+    description="Paper grid with 2 GB SEs: a site can hold at most 4 of "
+                "the 12 files a job needs, so eviction policy dominates.",
+    probes="eviction-pressure regime (two-phase vs plain LRU)",
+    storage_gb=2.0,
+))

@@ -104,6 +104,10 @@ class ShortestTransferScheduler(SchedulerPolicy):
         return min(online, key=lambda s: (cost(s), s))
 
 
+#: Scheduling-policy registry, keyed by each policy's ``name`` attribute:
+#: ``dataaware`` (the paper's §3.2 algorithm), ``random``, ``leastloaded``,
+#: ``shortesttransfer``. These names are what ``GridSimulator``,
+#: ``run_experiment`` and ``ScenarioSpec.scheduler`` accept.
 SCHEDULERS: dict[str, type[SchedulerPolicy]] = {
     c.name: c for c in (DataAwareScheduler, RandomScheduler, LeastLoadedScheduler,
                         ShortestTransferScheduler)
@@ -112,4 +116,11 @@ SCHEDULERS: dict[str, type[SchedulerPolicy]] = {
 
 def make_scheduler(name: str, catalog: ReplicaCatalog, topology: GridTopology,
                    seed: int = 0) -> SchedulerPolicy:
+    """Instantiate a scheduling policy from :data:`SCHEDULERS` by name.
+
+    ``seed`` only matters for stochastic policies (``random``); the rest are
+    deterministic functions of catalog + topology state. Raises ``KeyError``
+    for unknown names — callers validate against ``SCHEDULERS`` for nicer
+    errors (e.g. ``ScenarioSpec.__post_init__``).
+    """
     return SCHEDULERS[name](catalog, topology, seed=seed)

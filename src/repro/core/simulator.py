@@ -272,8 +272,10 @@ class GridSimulator:
         slot = self._free_slots.pop()
         tr.slot = slot
         src = tr.plan.src
-        # an inter-region transfer traverses [nic, wan] (see links_for)
-        reg = self.topology.region_of(src) if len(tr.links) > 1 else -1
+        # an inter-region transfer traverses [nic, uplink] (see links_for);
+        # ``reg`` is the uplink's index into topology.wan_links (== the
+        # source region id on two-level trees, a deeper uplink otherwise)
+        reg = self.topology.uplink_index(src, tr.plan.dst) if len(tr.links) > 1 else -1
         self._t_rem[slot] = size
         self._t_rate[slot] = 0.0
         self._t_src[slot] = src

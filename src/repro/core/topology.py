@@ -1,15 +1,38 @@
-"""Hierarchical two-level grid topology (paper §3.1).
+"""Hierarchical n-tier grid topology (paper §3.1, generalized).
 
-Regions are connected by slow inter-region links (WAN in the paper; cross-pod
-DCN on a TPU cluster). Sites inside a region share a fast intra-region fabric
-(LAN; ICI on a pod). Every site has a Computing Element (capacity) and a
-Storage Element (capacity in bytes).
+The paper studies one fixed two-level hierarchy: regions connected by slow
+inter-region links (WAN; cross-pod DCN on a TPU cluster), each containing
+sites that share a fast intra-region fabric (LAN; ICI on a pod). This module
+generalizes that to an arbitrary tier *tree* described by ``tier_fanouts``:
 
-Bandwidth model: each site has an outbound NIC at LAN speed; each region has
-a WAN uplink. An intra-region transfer is bottlenecked by the source NIC; an
-inter-region transfer traverses {source NIC, source-region WAN uplink} and is
-bottlenecked by the slower (in the paper's configuration always the WAN,
-10 Mbps vs 1000 Mbps). Links are fair-shared among concurrent transfers.
+    (4, 13)      -> the paper's grid: 4 regions x 13 sites
+    (2, 4, 7)    -> 2 clusters, each 4 groups of 7 sites (56 sites, 4 tiers
+                    counting the root)
+    (2, 3, 3, 3) -> a 5-tier hierarchy, 54 sites
+
+Leaves are sites; every internal node below the root owns an *uplink* whose
+bandwidth is given per level (top-down) by ``uplink_bandwidths``. The
+innermost groups (the leaf's immediate parent) play the paper's "region"
+role: replica strategies treat them as the locality domain and the paper's
+inter-communication metric counts transfers that leave them.
+
+Bandwidth model (source-side): each site has an outbound NIC at LAN speed.
+A transfer that stays inside its leaf group is bottlenecked by the source
+NIC. A transfer that leaves the group is accounted on the source NIC plus
+the *topmost* uplink it crosses on the source side — in a hierarchy whose
+bandwidth decreases going up the tree (the interesting regime, and the
+paper's configuration: 10 Mbps WAN vs 1000 Mbps LAN) that uplink is the
+bottleneck; the faster uplinks below it are not modeled as contended. For
+two-level trees this reduces exactly to the paper's {source NIC, source
+region WAN uplink} rule. Links are fair-shared among concurrent transfers.
+
+Heterogeneity knobs (all optional, defaults reproduce the paper):
+  * ``uplink_scale``: per-uplink bandwidth multipliers, e.g. a "fat region"
+    whose WAN uplink is 10x the others (DIANA-style network awareness);
+  * ``storage_scale``: per-region SE-capacity multipliers (cache-starved or
+    storage-rich regions);
+  * ``compute_capacities`` / ``storage_capacities``: explicit per-site
+    overrides.
 
 Units are abstract but consistent: bandwidth in bytes/sec, storage in bytes,
 compute in ops/sec ("MIPS" in the paper, FLOP/s on a TPU cluster).
@@ -18,7 +41,7 @@ compute in ops/sec ("MIPS" in the paper, FLOP/s on a TPU cluster).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable
+from typing import Iterable, Sequence
 
 
 @dataclasses.dataclass
@@ -63,7 +86,16 @@ class Link:
 
 
 class GridTopology:
-    """Two-level hierarchy: regions of sites (see module docstring)."""
+    """n-tier hierarchy of sites (see module docstring).
+
+    The two-positional-argument form ``GridTopology(n_regions,
+    sites_per_region, ...)`` builds the paper's two-level tree and is
+    unchanged from the original API. Deeper trees are requested with
+    ``tier_fanouts`` (which overrides the two positional counts) plus
+    ``uplink_bandwidths``, one bandwidth per internal level, top-down;
+    for two-level trees ``uplink_bandwidths`` defaults to
+    ``(wan_bandwidth,)``.
+    """
 
     def __init__(
         self,
@@ -75,38 +107,126 @@ class GridTopology:
         storage_capacity: float,
         compute_capacities: Iterable[float] | None = None,
         seed: int = 0,
+        tier_fanouts: Sequence[int] | None = None,
+        uplink_bandwidths: Sequence[float] | None = None,
+        uplink_scale: Sequence[tuple[int, int, float]] = (),
+        storage_scale: Sequence[tuple[int, float]] = (),
+        storage_capacities: Iterable[float] | None = None,
     ) -> None:
-        self.n_regions = n_regions
-        self.sites_per_region = sites_per_region
+        fanouts = (tuple(tier_fanouts) if tier_fanouts is not None
+                   else (n_regions, sites_per_region))
+        if len(fanouts) < 2 or any(f < 1 for f in fanouts):
+            raise ValueError(f"tier_fanouts must be >=2 positive levels, "
+                             f"got {fanouts!r}")
+        if uplink_bandwidths is None:
+            if len(fanouts) != 2:
+                raise ValueError(
+                    "uplink_bandwidths (one per internal level, top-down) is "
+                    f"required for {len(fanouts)}-level fanouts {fanouts!r}")
+            uplinks_bw = (wan_bandwidth,)
+        else:
+            uplinks_bw = tuple(uplink_bandwidths)
+            if len(uplinks_bw) != len(fanouts) - 1:
+                raise ValueError(
+                    f"need {len(fanouts) - 1} uplink bandwidths for fanouts "
+                    f"{fanouts!r}, got {len(uplinks_bw)}")
+        self.tier_fanouts = fanouts
+        self.n_regions = 1
+        for f in fanouts[:-1]:
+            self.n_regions *= f
+        self.sites_per_region = fanouts[-1]
         self.lan_bandwidth = lan_bandwidth
-        self.wan_bandwidth = wan_bandwidth
+        self.wan_bandwidth = uplinks_bw[0]
+        self.uplink_bandwidths = uplinks_bw
+
+        n_sites = self.n_regions * self.sites_per_region
+        storage_caps = (list(storage_capacities)
+                        if storage_capacities is not None else None)
+        region_storage_factor: dict[int, float] = {}
+        for region, factor in storage_scale:
+            if not 0 <= region < self.n_regions:
+                raise ValueError(
+                    f"storage_scale region {region} out of range "
+                    f"(0..{self.n_regions - 1})")
+            region_storage_factor[region] = factor
+
         self.sites: list[Site] = []
         self.regions: list[Region] = []
         caps = list(compute_capacities) if compute_capacities is not None else None
         # Deterministic heterogeneous capacities when not given: the paper
         # assumes heterogeneous MIPS but gives no table; spread 1x..4x.
         sid = 0
-        for r in range(n_regions):
+        for r in range(self.n_regions):
             ids = []
-            for _ in range(sites_per_region):
+            for _ in range(self.sites_per_region):
                 if caps is not None:
                     cap = caps[sid % len(caps)]
                 else:
                     cap = 1e9 * (1 + ((sid * 2654435761 + seed) % 4))
+                if storage_caps is not None:
+                    store = storage_caps[sid % len(storage_caps)]
+                else:
+                    store = storage_capacity * region_storage_factor.get(r, 1.0)
                 self.sites.append(
                     Site(site_id=sid, region_id=r, compute_capacity=cap,
-                         storage_capacity=storage_capacity)
+                         storage_capacity=store)
                 )
                 ids.append(sid)
                 sid += 1
             self.regions.append(Region(region_id=r, site_ids=ids))
+        assert sid == n_sites
+
+        # -- link fabric ---------------------------------------------------
+        # Ancestor table: _anc[site] = global node index of the site's
+        # ancestor at each internal level, top-down (level 1 .. depth-1).
+        # For the two-level tree this is just ``(region_id,)``.
+        depth = len(fanouts)
+        self._n_uplink_levels = depth - 1
+        self._anc: list[tuple[int, ...]] = []
+        for s in range(n_sites):
+            anc = []
+            nodes_below = n_sites
+            for level in range(1, depth):
+                nodes_below //= fanouts[level - 1]
+                anc.append(s // nodes_below)
+            self._anc.append(tuple(anc))
+        # Flatten uplinks by level (top-down), so for two-level trees the
+        # uplink index of a region's WAN link equals its region id.
+        self._uplink_offset: list[int] = []
+        self.wan_links: list[Link] = []
+        n_nodes = 1
+        scale: dict[tuple[int, int], float] = {}
+        nodes_at = [1]
+        for f in fanouts[:-1]:
+            nodes_at.append(nodes_at[-1] * f)
+        for level, node, factor in uplink_scale:
+            if not 1 <= level <= depth - 1:
+                raise ValueError(
+                    f"uplink_scale level {level} out of range (1-based, "
+                    f"1..{depth - 1})")
+            if not 0 <= node < nodes_at[level]:
+                raise ValueError(
+                    f"uplink_scale node {node} out of range for level "
+                    f"{level} (0..{nodes_at[level] - 1})")
+            scale[(level, node)] = factor
+        for level in range(1, depth):
+            n_nodes *= fanouts[level - 1]
+            self._uplink_offset.append(len(self.wan_links))
+            bw = uplinks_bw[level - 1]
+            for node in range(n_nodes):
+                self.wan_links.append(
+                    Link(f"up{level}.{node}", bw * scale.get((level, node), 1.0)))
         self.nic_links = [Link(f"nic{s.site_id}", lan_bandwidth) for s in self.sites]
-        self.wan_links = [Link(f"wan{r}", wan_bandwidth) for r in range(n_regions)]
 
     # -- structure queries ------------------------------------------------
     @property
     def n_sites(self) -> int:
         return len(self.sites)
+
+    @property
+    def depth(self) -> int:
+        """Number of tier levels, counting the leaf (site) level."""
+        return len(self.tier_fanouts)
 
     def region_of(self, site_id: int) -> int:
         return self.sites[site_id].region_id
@@ -120,12 +240,33 @@ class GridTopology:
     def online_sites(self) -> list[int]:
         return [s.site_id for s in self.sites if s.online]
 
+    def ancestors(self, site_id: int) -> tuple[int, ...]:
+        """Global node index of each internal-level ancestor, top-down."""
+        return self._anc[site_id]
+
     # -- bandwidth model ---------------------------------------------------
+    def uplink_index(self, src: int, dst: int) -> int:
+        """Index into ``wan_links`` of the topmost uplink a src->dst transfer
+        crosses on the source side, or -1 for an intra-region transfer.
+
+        For two-level trees this is exactly ``region_of(src)`` whenever the
+        regions differ (one uplink per region, level-ordered flattening).
+        """
+        a = self._anc[src]
+        b = self._anc[dst]
+        if a[-1] == b[-1]:
+            return -1
+        for off, x, y in zip(self._uplink_offset, a, b):
+            if x != y:
+                return off + x
+        raise AssertionError("ancestor tables inconsistent")
+
     def links_for(self, src: int, dst: int) -> list[Link]:
         """Links traversed by a src->dst transfer (source-side model)."""
-        if self.same_region(src, dst):
+        u = self.uplink_index(src, dst)
+        if u < 0:
             return [self.nic_links[src]]
-        return [self.nic_links[src], self.wan_links[self.region_of(src)]]
+        return [self.nic_links[src], self.wan_links[u]]
 
     def point_bandwidth(self, src: int, dst: int) -> float:
         """Available bandwidth if one more transfer joined src->dst.
@@ -137,9 +278,9 @@ class GridTopology:
         """
         nic = self.nic_links[src]
         bw = nic.bandwidth / max(1, nic.active + 1)
-        sreg = self.sites[src].region_id
-        if sreg != self.sites[dst].region_id:
-            wan = self.wan_links[sreg]
+        u = self.uplink_index(src, dst)
+        if u >= 0:
+            wan = self.wan_links[u]
             wbw = wan.bandwidth / max(1, wan.active + 1)
             if wbw < bw:
                 bw = wbw

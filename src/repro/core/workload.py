@@ -32,7 +32,29 @@ MB = 1e6
 
 @dataclasses.dataclass
 class GridConfig:
-    """Paper Table 1 defaults; bandwidths in bytes/s, sizes in bytes."""
+    """One experiment's full grid + workload configuration.
+
+    The defaults reproduce the paper's Table 1 exactly: a 4-region x 13-site
+    two-level grid with 10 GB SEs, 1000/10 Mbps LAN/WAN, 500 jobs drawn from
+    5 types each requiring 12 of 100 x 500 MB files. Bandwidths are in
+    bytes/s, sizes in bytes, job length in ops.
+
+    Beyond-paper topology knobs (all default to "off", i.e. the paper grid):
+
+    ``tier_fanouts``
+        An n-level tier tree, e.g. ``(2, 4, 7)`` = 2 clusters of 4 groups of
+        7 sites. When set it overrides ``n_regions``/``sites_per_region``
+        (which describe the two-level special case) and requires
+        ``uplink_bandwidths``, one per internal level, top-down.
+    ``uplink_scale``
+        Per-uplink bandwidth multipliers ``(level, node, factor)`` for
+        heterogeneous ("fat-region") fabrics; level 1 is the topmost.
+    ``storage_scale``
+        Per-region SE-capacity multipliers ``(region, factor)``.
+
+    Instances are usually produced from a named :class:`repro.core.scenarios.
+    ScenarioSpec` via ``to_grid_config`` rather than built by hand.
+    """
 
     n_regions: int = 4
     sites_per_region: int = 13
@@ -48,10 +70,24 @@ class GridConfig:
     interarrival: float = 60.0               # seconds between submissions
     zipf_alpha: float | None = 0.9           # per-job file draw skew (None=fixed sets)
     seed: int = 0
+    # -- beyond-paper topology shape (None/() = the paper's 2-level grid) --
+    tier_fanouts: tuple[int, ...] | None = None
+    uplink_bandwidths: tuple[float, ...] | None = None   # bytes/s, top-down
+    uplink_scale: tuple[tuple[int, int, float], ...] = ()
+    storage_scale: tuple[tuple[int, float], ...] = ()
 
     @property
     def n_files(self) -> int:
         return int(self.total_file_bytes / self.file_size)
+
+    @property
+    def n_sites(self) -> int:
+        if self.tier_fanouts is not None:
+            n = 1
+            for f in self.tier_fanouts:
+                n *= f
+            return n
+        return self.n_regions * self.sites_per_region
 
 
 def build_topology(cfg: GridConfig) -> GridTopology:
@@ -59,6 +95,9 @@ def build_topology(cfg: GridConfig) -> GridTopology:
         cfg.n_regions, cfg.sites_per_region,
         lan_bandwidth=cfg.lan_bandwidth, wan_bandwidth=cfg.wan_bandwidth,
         storage_capacity=cfg.storage_capacity, seed=cfg.seed,
+        tier_fanouts=cfg.tier_fanouts,
+        uplink_bandwidths=cfg.uplink_bandwidths,
+        uplink_scale=cfg.uplink_scale, storage_scale=cfg.storage_scale,
     )
 
 

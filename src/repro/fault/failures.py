@@ -1,21 +1,61 @@
-"""Fault-tolerance harness for the training loop.
+"""Fault injection, for both the grid DES and the training runtime.
 
-The DES (repro.core.simulator) studies failures at grid scale; this module
-is the *runtime* side: a supervisor that wraps a step function with
-checkpoint/restart, deterministic failure injection, straggler detection,
-and elastic re-meshing. On real hardware the failure signal comes from the
-cluster manager; here ``FailurePlan`` injects it so tests/examples can prove
-the recovery path end to end.
+Two halves:
+
+* **Grid side** — :class:`ChurnSpec` + :func:`churn_schedule` generate
+  deterministic site failure/recovery (and slowdown) event lists for the
+  discrete-event simulator (``repro.core.simulator``). The scenario engine
+  (``repro.core.scenarios``) drives this to build site-churn regimes.
+* **Runtime side** — :class:`TrainingSupervisor` wraps a step function with
+  checkpoint/restart, deterministic failure injection (``FailurePlan``),
+  straggler detection, and elastic re-meshing. On real hardware the failure
+  signal comes from the cluster manager; here the plan injects it so
+  tests/examples can prove the recovery path end to end.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import random as _random
 import time
 from typing import Any, Callable
 
 from repro.checkpoint.ckpt import (latest_step, restore_checkpoint,
                                    save_checkpoint)
+
+
+# --------------------------------------------------------------------------
+# grid-side injections (consumed by repro.core.run_experiment)
+# --------------------------------------------------------------------------
+# ChurnSpec itself lives in repro.core.scenarios (it is a ScenarioSpec field
+# and that module must stay importable without jax); re-exported here.
+from repro.core.scenarios import ChurnSpec  # noqa: E402
+
+
+def churn_schedule(spec: ChurnSpec, n_sites: int,
+                   seed: int = 0) -> list[tuple[int, float, float]]:
+    """Expand a :class:`ChurnSpec` into ``(site, at, duration)`` tuples for
+    :func:`repro.core.run_experiment`'s ``failures`` argument.
+
+    Failure times are evenly spaced over the window with a small jittered
+    offset; sites are drawn without replacement until the pool is exhausted
+    (then with replacement), so short schedules never hit one site twice.
+    """
+    if spec.n_failures <= 0:
+        return []
+    rng = _random.Random(seed ^ 0x5EED)
+    start, end = spec.window
+    span = max(0.0, end - start)
+    pool = list(range(n_sites))
+    rng.shuffle(pool)
+    out = []
+    for i in range(spec.n_failures):
+        site = pool[i] if i < len(pool) else rng.randrange(n_sites)
+        frac = (i + rng.random()) / spec.n_failures
+        at = start + frac * span
+        duration = rng.expovariate(1.0 / spec.mean_downtime_s)
+        out.append((site, at, max(1.0, duration)))
+    return out
 
 
 @dataclasses.dataclass(frozen=True)

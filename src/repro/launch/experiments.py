@@ -1,0 +1,158 @@
+"""Config-driven experiment runner: fan named scenarios through the engine.
+
+Every experiment in this repo — the paper figures, the beyond-paper
+regimes, ad-hoc CLI runs — is one :class:`repro.core.ScenarioSpec` lowered
+to a ``run_experiment`` call. This module is the single place that does the
+lowering (:func:`run_spec`), sweeps an axis of specs for the figure
+benchmarks (:func:`sweep`), and runs the registry end to end:
+
+    PYTHONPATH=src python -m repro.launch.experiments --list
+    PYTHONPATH=src python -m repro.launch.experiments --scenario paper_baseline bulk_diana
+    PYTHONPATH=src python -m repro.launch.experiments --all
+
+``--all`` (or an explicit ``--scenario`` list) writes machine-readable
+``results/BENCH_scenarios.json``: per scenario the full spec plus one row
+per seed with ``wall_s`` / ``avg_job_time_s`` / ``avg_inter_comms`` /
+``completed_jobs`` / ``makespan_s``. ``--jobs N`` overrides every
+scenario's job count for quick smoke passes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Iterable, Sequence
+
+from repro.core import (ExperimentResult, SCENARIOS, ScenarioSpec,
+                        arrival_schedule, get_scenario, injections,
+                        run_experiment, to_grid_config)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results")
+ROW_KEYS = ("wall_s", "avg_job_time_s", "avg_inter_comms", "completed_jobs",
+            "makespan_s")
+
+
+def run_spec(spec: ScenarioSpec, *, seed: int | None = None,
+             n_jobs: int | None = None) -> ExperimentResult:
+    """Lower one spec (at one seed) to ``run_experiment`` and run it."""
+    seed = spec.seeds[0] if seed is None else seed
+    n = spec.n_jobs if n_jobs is None else n_jobs
+    cfg = to_grid_config(spec, seed)
+    failures, slowdowns = injections(spec, seed=seed)
+    return run_experiment(
+        cfg, scheduler=spec.scheduler, strategy=spec.strategy, n_jobs=n,
+        failures=failures or None, slowdowns=slowdowns or None,
+        broker=spec.broker, batch_window=spec.batch_window_s,
+        arrival_burst=spec.arrival_burst,
+        arrival_times=arrival_schedule(spec, n, seed=seed),
+    )
+
+
+def run_scenario(spec: ScenarioSpec, *, n_jobs: int | None = None,
+                 seeds: Sequence[int] | None = None) -> list[dict]:
+    """Run a spec once per seed; one machine-readable row per run."""
+    rows = []
+    for seed in (spec.seeds if seeds is None else seeds):
+        t0 = time.perf_counter()
+        r = run_spec(spec, seed=seed, n_jobs=n_jobs)
+        rows.append({
+            "scenario": spec.name, "seed": seed, "n_jobs": r.n_jobs,
+            "wall_s": round(time.perf_counter() - t0, 3),
+            "avg_job_time_s": r.avg_job_time,
+            "avg_inter_comms": r.avg_inter_comms,
+            "completed_jobs": r.completed_jobs,
+            "makespan_s": r.makespan,
+            "total_wan_gb": r.total_wan_gb,
+        })
+    return rows
+
+
+def run_scenarios(names: Iterable[str], *, n_jobs: int | None = None,
+                  out_path: str | None = None, quiet: bool = False) -> dict:
+    """Run each named scenario and write ``BENCH_scenarios.json``."""
+    payload: dict = {"n_jobs_override": n_jobs, "scenarios": {}}
+    for name in names:
+        spec = get_scenario(name)
+        rows = run_scenario(spec, n_jobs=n_jobs)
+        payload["scenarios"][name] = {"spec": spec.to_dict(), "rows": rows}
+        if not quiet:
+            r = rows[0]
+            print(f"{name:>16} seeds={len(rows)} wall={r['wall_s']:7.2f}s "
+                  f"avg_job_time={r['avg_job_time_s']:9.0f}s "
+                  f"inter/job={r['avg_inter_comms']:6.2f} "
+                  f"completed={r['completed_jobs']}/{r['n_jobs']} "
+                  f"makespan={r['makespan_s']:9.0f}s")
+    if out_path is None:
+        out_path = os.path.join(RESULTS_DIR, "BENCH_scenarios.json")
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    if not quiet:
+        print(f"wrote {os.path.relpath(out_path)}")
+    return payload
+
+
+# -- figure sweeps (used by benchmarks/run.py) ------------------------------
+def _with_axis(spec: ScenarioSpec, axis: str, value) -> ScenarioSpec:
+    if axis == "n_jobs":
+        return dataclasses.replace(spec, n_jobs=int(value))
+    if axis == "wan_mbps":
+        return dataclasses.replace(
+            spec, uplink_mbps=(float(value),) + spec.uplink_mbps[1:])
+    if axis == "scheduler":
+        return dataclasses.replace(spec, scheduler=str(value))
+    raise ValueError(f"unknown sweep axis {axis!r}")
+
+
+def sweep(base: ScenarioSpec, *, axis: str, values: Sequence,
+          strategies: Sequence[str]) -> dict[tuple, ExperimentResult]:
+    """Cross an axis (``n_jobs`` | ``wan_mbps`` | ``scheduler``) with a set
+    of replication strategies; returns ``{(value, strategy): result}``.
+
+    This is the config-driven backbone of the per-figure benchmarks: each
+    cell is ``run_spec`` of the base scenario with two fields replaced.
+    """
+    out = {}
+    for v in values:
+        spec = _with_axis(base, axis, v)
+        for s in strategies:
+            out[(v, s)] = run_spec(dataclasses.replace(spec, strategy=s))
+    return out
+
+
+def main(argv: Sequence[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Run named scenarios from the repro.core.scenarios "
+                    "registry and write results/BENCH_scenarios.json")
+    g = ap.add_mutually_exclusive_group(required=True)
+    g.add_argument("--scenario", nargs="+", metavar="NAME",
+                   help="scenario names to run (see --list)")
+    g.add_argument("--all", action="store_true",
+                   help="run every registered scenario")
+    g.add_argument("--list", action="store_true",
+                   help="list registered scenarios and exit")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="override every scenario's job count")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default results/BENCH_scenarios.json)")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name, spec in sorted(SCENARIOS.items()):
+            fan = "x".join(str(f) for f in spec.tier_fanouts)
+            print(f"{name:>16}  [{fan} sites={spec.n_sites} "
+                  f"arrival={spec.arrival} strategy={spec.strategy} "
+                  f"broker={spec.broker}]  {spec.description}")
+        return
+    names = sorted(SCENARIOS) if args.all else args.scenario
+    for name in names:
+        get_scenario(name)      # fail fast on typos before running anything
+    run_scenarios(names, n_jobs=args.jobs, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

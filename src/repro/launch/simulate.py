@@ -1,23 +1,37 @@
-"""Simulation CLI: run any (scheduler x strategy) on the paper's grid.
+"""Simulation CLI: run a registered scenario, or an ad-hoc grid, across
+replication strategies.
 
   PYTHONPATH=src python -m repro.launch.simulate --strategy hrs bhr lru \
       --jobs 500 --wan-mbps 10
+  PYTHONPATH=src python -m repro.launch.simulate --scenario cache_starved
+
+Both forms build a ``ScenarioSpec`` and run it through
+``repro.launch.experiments.run_spec`` — the same config-driven path the
+benchmarks and the scenario runner use. For machine-readable multi-scenario
+output use ``python -m repro.launch.experiments`` instead.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
-from repro.core import SCHEDULERS, STRATEGIES, GridConfig, run_experiment
+from repro.core import (ChurnSpec, SCENARIOS, STRATEGIES, SCHEDULERS,
+                        ScenarioSpec, get_scenario)
+from repro.launch.experiments import run_spec
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default=None, choices=sorted(SCENARIOS),
+                    help="run a registered scenario instead of the ad-hoc "
+                         "grid flags below")
     ap.add_argument("--strategy", nargs="+", default=["hrs", "bhr", "lru"],
                     choices=list(STRATEGIES))
     ap.add_argument("--scheduler", default="dataaware",
                     choices=list(SCHEDULERS))
-    ap.add_argument("--jobs", type=int, default=500)
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="job count (default: 500, or the scenario's)")
     ap.add_argument("--wan-mbps", type=float, default=10.0)
     ap.add_argument("--lan-mbps", type=float, default=1000.0)
     ap.add_argument("--regions", type=int, default=4)
@@ -27,18 +41,27 @@ def main() -> None:
                     help="number of random site failures to inject")
     args = ap.parse_args()
 
-    cfg = GridConfig(n_regions=args.regions, sites_per_region=args.sites,
-                     wan_bandwidth=args.wan_mbps * 1e6 / 8,
-                     lan_bandwidth=args.lan_mbps * 1e6 / 8,
-                     n_jobs=args.jobs, seed=args.seed)
-    n_sites = args.regions * args.sites
-    failures = [((3 + 7 * i) % n_sites, 2000.0 * (i + 1), 4000.0)
-                for i in range(args.failures)]
+    if args.scenario is not None:
+        spec = get_scenario(args.scenario)
+        if args.failures:
+            spec = dataclasses.replace(spec, churn=ChurnSpec(
+                n_failures=args.failures,
+                window=(2000.0, 2000.0 * (args.failures + 1)),
+                mean_downtime_s=4000.0))
+    else:
+        churn = ChurnSpec(n_failures=args.failures,
+                          window=(2000.0, 2000.0 * (args.failures + 1)),
+                          mean_downtime_s=4000.0) if args.failures else ChurnSpec()
+        spec = ScenarioSpec(
+            name="cli", description="ad-hoc CLI grid",
+            tier_fanouts=(args.regions, args.sites),
+            lan_mbps=args.lan_mbps, uplink_mbps=(args.wan_mbps,),
+            scheduler=args.scheduler, churn=churn, seeds=(args.seed,))
     print(f"{'strategy':>14} {'avg_job_time':>13} {'inter/job':>10} "
           f"{'WAN GB':>8} {'makespan':>10}")
     for strat in args.strategy:
-        r = run_experiment(cfg, scheduler=args.scheduler, strategy=strat,
-                           n_jobs=args.jobs, failures=failures or None)
+        r = run_spec(dataclasses.replace(spec, strategy=strat),
+                     seed=args.seed, n_jobs=args.jobs)
         print(f"{strat:>14} {r.avg_job_time:>12.0f}s {r.avg_inter_comms:>10.2f} "
               f"{r.total_wan_gb:>8.1f} {r.makespan:>9.0f}s")
 
