@@ -1,16 +1,33 @@
+"""Roofline report: final dryrun sweep vs the recorded baseline.
+
+Reads ``results/dryrun_v3`` (produced by ``repro.launch.dryrun``), prints
+the single-pod dominant-term table against
+``results/roofline_baseline.json`` and writes ``results/roofline_final
+{,_multi}.json``. Lives in ``benchmarks/`` with the rest of the reporting
+harness; run it from anywhere:
+
+    python benchmarks/roofline_final.py
+"""
+
 import json
+import os
 import sys
 
-sys.path.insert(0, "src")
-from repro.launch.roofline import build_table, fmt_table
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
 
-rows = build_table("results/dryrun_v3", "single")
+from repro.launch.roofline import build_table, fmt_table  # noqa: E402
+
+RESULTS = os.path.join(ROOT, "results")
+
+rows = build_table(os.path.join(RESULTS, "dryrun_v3"), "single")
 print(fmt_table(rows))
-with open("results/roofline_final.json", "w") as f:
+with open(os.path.join(RESULTS, "roofline_final.json"), "w") as f:
     json.dump(rows, f, indent=1)
 
 base = {(r["arch"], r["shape"]): r
-        for r in json.load(open("results/roofline_baseline.json"))}
+        for r in json.load(open(os.path.join(RESULTS,
+                                             "roofline_baseline.json")))}
 print("\n=== dominant-term: baseline -> final (single-pod) ===")
 print(f"{'cell':38s} {'dom':>10s} {'base_s':>9s} {'final_s':>9s} {'x':>6s} "
       f"{'useful%':>8s} {'roofl%':>7s}")
@@ -27,8 +44,8 @@ for r in rows:
           f"{100*r['roofline_fraction']:7.1f}")
 
 # multi-pod fits summary
-rows_m = build_table("results/dryrun_v3", "multi")
-with open("results/roofline_final_multi.json", "w") as f:
+rows_m = build_table(os.path.join(RESULTS, "dryrun_v3"), "multi")
+with open(os.path.join(RESULTS, "roofline_final_multi.json"), "w") as f:
     json.dump(rows_m, f, indent=1)
 over = [(r["arch"], r["shape"], round(r["peak_gb"], 1))
         for r in rows_m if not r["fits_hbm"]]

@@ -19,12 +19,18 @@ Paper figures (all on the Table-1 grid: 4 regions x 13 sites, 10 GB SEs,
 Beyond-paper: scheduler ablation (the paper's scheduler vs random /
 least-loaded / shortest-transfer), jit'd dispatch throughput, fault-
 tolerance run, a 2k/5k/10k-job scale sweep through the batch-dispatch
-broker (writes ``results/BENCH_scale.json``), kernel µbenches (interpret
-mode on CPU).
+broker (writes ``results/BENCH_scale.json``), a network-engine sweep
+quantifying the per-link path-contention fidelity change and the
+vectorized re-rate backend (writes ``results/BENCH_net.json``), kernel
+µbenches (interpret mode on CPU).
+
+Run ``python benchmarks/run.py --help`` for the bench list; name benches
+as positional args to run a subset (default: all).
 """
 
 from __future__ import annotations
 
+import argparse
 import csv
 import dataclasses
 import json
@@ -222,6 +228,60 @@ def scale_sweep() -> None:
          f"10k_completed={biggest['completed_jobs']}")
 
 
+def net_sweep(n_jobs: int = 10000) -> None:
+    """Network-engine sweep: (a) fidelity — deep-tree scenarios under the
+    legacy topmost-uplink model vs the per-link path model; (b) performance
+    — the numpy incremental backend vs the pallas/vectorized full re-rate
+    at the 10k-job scale point. Writes ``results/BENCH_net.json``."""
+    from repro.core import SCENARIOS
+    from repro.launch.experiments import run_spec
+    t0 = time.perf_counter()
+    fidelity = []
+    for scen in ("deep_5tier", "deep_contended"):
+        base = SCENARIOS[scen]
+        for net in ("topmost", "numpy"):
+            spec = dataclasses.replace(base, net=net)
+            t1 = time.perf_counter()
+            r = run_spec(spec, n_jobs=n_jobs)
+            fidelity.append({
+                "scenario": scen, "net": net, "n_jobs": n_jobs,
+                "wall_s": round(time.perf_counter() - t1, 3),
+                "avg_job_time_s": r.avg_job_time,
+                "avg_inter_comms": r.avg_inter_comms,
+                "total_wan_gb": r.total_wan_gb,
+                "makespan_s": r.makespan,
+                "completed_jobs": r.completed_jobs,
+            })
+    perf = []
+    bulk = SCENARIOS["bulk_diana"]
+    for net in ("numpy", "pallas"):
+        spec = dataclasses.replace(bulk, net=net)
+        t1 = time.perf_counter()
+        r = run_spec(spec, n_jobs=n_jobs)
+        perf.append({
+            "scenario": "bulk_diana", "net": net, "n_jobs": n_jobs,
+            "wall_s": round(time.perf_counter() - t1, 3),
+            "avg_job_time_s": r.avg_job_time,
+            "completed_jobs": r.completed_jobs,
+        })
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "BENCH_net.json"), "w") as f:
+        json.dump({"n_jobs": n_jobs, "fidelity": fidelity, "perf": perf},
+                  f, indent=1)
+    us = (time.perf_counter() - t0) * 1e6 / (len(fidelity) + len(perf))
+    by = {(r["scenario"], r["net"]): r for r in fidelity}
+    d5 = (by[("deep_5tier", "numpy")]["avg_job_time_s"]
+          / by[("deep_5tier", "topmost")]["avg_job_time_s"] - 1.0)
+    dc = (by[("deep_contended", "numpy")]["avg_job_time_s"]
+          / by[("deep_contended", "topmost")]["avg_job_time_s"] - 1.0)
+    speedup = perf[0]["wall_s"] / max(perf[1]["wall_s"], 1e-9)
+    _row("net_sweep", us,
+         f"deep5_fidelity={100 * d5:+.1f}%;contended_fidelity={100 * dc:+.1f}%;"
+         f"pallas_vs_numpy_wall={speedup:.2f}x;"
+         f"numpy_10k_wall={perf[0]['wall_s']:.1f}s;"
+         f"pallas_10k_wall={perf[1]['wall_s']:.1f}s")
+
+
 def kernel_flash_attention() -> None:
     import jax
     import jax.numpy as jnp
@@ -261,19 +321,51 @@ def kernel_selective_scan() -> None:
          f"tokens_per_s={Bz*S/us*1e6:.0f}")
 
 
-def main() -> None:
+#: name -> (fn, one-line description); listed by ``--help`` and runnable
+#: as positional args. Order is the default full run.
+BENCHES = {
+    "fig4": (fig4_avg_job_time_vs_njobs,
+             "avg job time vs n_jobs, HRS/BHR/LRU (paper fig4)"),
+    "fig5": (fig5_avg_job_time_1000, "avg job time at 1000 jobs (paper fig5)"),
+    "fig6": (fig6_inter_communications,
+             "inter-region communications per job (paper fig6)"),
+    "fig7": (fig7_wan_bandwidth_sweep,
+             "avg job time vs WAN bandwidth (paper fig7)"),
+    "sched_ablation": (scheduler_ablation,
+                       "scheduler ablation at fixed HRS replication"),
+    "eviction_ablation": (eviction_phase_ablation,
+                          "HRS two-phase vs single-phase eviction"),
+    "sched_throughput": (sched_throughput, "jitted dispatch decision latency"),
+    "failover": (failover_recovery,
+                 "fault-tolerance run: failures + speculative backups"),
+    "scale_sweep": (scale_sweep,
+                    "2k/5k/10k-job engine scale sweep -> BENCH_scale.json"),
+    "net_sweep": (net_sweep,
+                  "network-engine sweep: topmost-vs-path fidelity + "
+                  "numpy-vs-pallas re-rate perf -> BENCH_net.json"),
+    "kernel_flash": (kernel_flash_attention, "flash-attention µbench (CPU ref)"),
+    "kernel_scan": (kernel_selective_scan, "selective-scan µbench (CPU ref)"),
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description=("Benchmark harness: prints name,us_per_call,derived "
+                     "CSV rows and writes detail files under results/."),
+        epilog="benches:\n" + "\n".join(
+            f"  {name:>18}  {desc}" for name, (_, desc) in BENCHES.items()),
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("bench", nargs="*", choices=[[]] + list(BENCHES),
+                    metavar="BENCH",
+                    help="benches to run (default: all; see list below)")
+    ap.add_argument("--net-jobs", type=int, default=10000,
+                    help="job count for the net_sweep scale point "
+                         "(default 10000)")
+    args = ap.parse_args(argv)
     print("name,us_per_call,derived")
-    fig4_avg_job_time_vs_njobs()
-    fig5_avg_job_time_1000()
-    fig6_inter_communications()
-    fig7_wan_bandwidth_sweep()
-    scheduler_ablation()
-    eviction_phase_ablation()
-    sched_throughput()
-    failover_recovery()
-    scale_sweep()
-    kernel_flash_attention()
-    kernel_selective_scan()
+    for name in args.bench or BENCHES:
+        fn = BENCHES[name][0]
+        fn(args.net_jobs) if name == "net_sweep" else fn()
 
 
 if __name__ == "__main__":

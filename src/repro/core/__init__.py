@@ -4,6 +4,7 @@ jit-compiled dispatch path used by the training/serving runtime."""
 
 from .catalog import FileInfo, ReplicaCatalog
 from .metrics import ExperimentResult, run_experiment
+from .network import NetworkEngine
 from .scenarios import (ChurnSpec, SCENARIOS, ScenarioSpec, arrival_schedule,
                         get_scenario, injections, register_scenario,
                         to_grid_config)
@@ -21,6 +22,7 @@ from .workload import (GB, MB, GridConfig, build_catalog, build_topology,
 
 __all__ = [
     "FileInfo", "ReplicaCatalog", "ExperimentResult", "run_experiment",
+    "NetworkEngine",
     "ChurnSpec", "SCENARIOS", "ScenarioSpec", "arrival_schedule",
     "get_scenario", "injections", "register_scenario", "to_grid_config",
     "BHRStrategy", "FetchPlan", "HRSSinglePhaseStrategy", "HRSStrategy",

@@ -18,6 +18,13 @@ fuse into one XLA computation.
 
 This module is also the bridge used by grid/placement.py to run dispatch
 on-device for batches of jobs (vmap over the job axis).
+
+Beyond the paper's policy, :class:`JaxShortestTransferBroker` vectorizes the
+``shortesttransfer`` baseline the same way: a *point-bandwidth matrix*
+``B[h, s] = min over link_ids_for(h, s) of bandwidth / (active + 1)`` is
+snapshotted from the NetworkEngine's per-link arrays (one gather-min over a
+static ``(sites, sites, path)`` link-id tensor), and each job's estimated
+(transfer + queue) cost is an einsum-shaped masked reduction over it.
 """
 
 from __future__ import annotations
@@ -50,7 +57,13 @@ select_sites_batch = jax.jit(
 
 
 class JaxScheduler:
-    """Array-backed mirror of (catalog, topology) for on-device dispatch."""
+    """Array-backed mirror of (catalog, topology) for on-device dispatch.
+
+    Also the snapshot substrate for every jax broker: the host-side
+    presence bitmap, per-site load/capacity/online vectors and
+    required-file masks built here are shared with
+    :class:`JaxShortestTransferBroker`.
+    """
 
     def __init__(self, catalog: ReplicaCatalog, topology: GridTopology) -> None:
         self.catalog = catalog
@@ -59,23 +72,37 @@ class JaxScheduler:
         self.lfn_index = {l: i for i, l in enumerate(self.lfns)}
         self.sizes = jnp.asarray([catalog.size(l) for l in self.lfns], jnp.float32)
 
-    def snapshot(self):
-        n_sites, n_files = self.topology.n_sites, len(self.lfns)
-        presence = np.zeros((n_sites, n_files), dtype=bool)
+    # -- host-side snapshot pieces (shared by all brokers) -----------------
+    def presence_np(self) -> np.ndarray:
+        """bool[n_sites, n_files] replica bitmap (all holders)."""
+        presence = np.zeros((self.topology.n_sites, len(self.lfns)), bool)
         for j, lfn in enumerate(self.lfns):
             for h in self.catalog.holders(lfn):
                 presence[h, j] = True
+        return presence
+
+    def site_state_np(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(load, capacity, online) per-site vectors."""
         load = np.array([s.queued_work for s in self.topology.sites], np.float32)
         cap = np.array([s.compute_capacity for s in self.topology.sites], np.float32)
         online = np.array([s.online for s in self.topology.sites], bool)
-        return (jnp.asarray(presence), self.sizes, jnp.asarray(load),
-                jnp.asarray(cap), jnp.asarray(online))
+        return load, cap, online
+
+    def required_np(self, required_sets: list[list[str]]) -> np.ndarray:
+        """bool[n_jobs, n_files] requirement masks (R_j rows)."""
+        m = np.zeros((len(required_sets), len(self.lfns)), dtype=bool)
+        for i, req in enumerate(required_sets):
+            for lfn in req:
+                m[i, self.lfn_index[lfn]] = True
+        return m
+
+    def snapshot(self):
+        load, cap, online = self.site_state_np()
+        return (jnp.asarray(self.presence_np()), self.sizes,
+                jnp.asarray(load), jnp.asarray(cap), jnp.asarray(online))
 
     def required_mask(self, required: list[str]) -> jnp.ndarray:
-        m = np.zeros((len(self.lfns),), dtype=bool)
-        for lfn in required:
-            m[self.lfn_index[lfn]] = True
-        return jnp.asarray(m)
+        return jnp.asarray(self.required_np([required])[0])
 
     def select(self, required: list[str]) -> int:
         presence, sizes, load, cap, online = self.snapshot()
@@ -84,6 +111,76 @@ class JaxScheduler:
 
     def select_batch(self, required_sets: list[list[str]]) -> list[int]:
         presence, sizes, load, cap, online = self.snapshot()
-        masks = jnp.stack([self.required_mask(r) for r in required_sets])
+        masks = jnp.asarray(self.required_np(required_sets))
         return [int(i) for i in
                 select_sites_batch(presence, sizes, masks, load, cap, online)]
+
+
+@jax.jit
+def st_costs_batch(path, valid, link_bw, link_act, presence, fetch_mask,
+                   sizes, required, rel, online):
+    """ShortestTransfer (Chang et al. [6]) as one fused computation.
+
+    path/valid: i32/bool[n_sites, n_sites, max_links] — static link-id
+    tensor (``[h, s]`` row = ``link_ids_for(h, s)``, -1 padded); link_bw /
+    link_act: f32[n_links] — the NetworkEngine arrays; presence:
+    bool[n_sites, n_files]; fetch_mask: presence restricted to fetchable
+    holders (online or durable master); required: bool[n_jobs, n_files].
+    Returns f32[n_jobs, n_sites] costs (inf for offline sites).
+    """
+    share = link_bw / (link_act + 1.0)                       # + the new flow
+    b = jnp.where(valid, share[jnp.maximum(path, 0)], jnp.inf)
+    b = jnp.min(b, axis=-1)                                  # B[h, s]
+    # best fetchable source per (file, dst): max over holders of B[h, s]
+    bestbw = jnp.max(
+        jnp.where(fetch_mask[:, :, None], b[:, None, :], 0.0), axis=0)
+    t_fs = jnp.where(bestbw > 0.0, sizes[:, None] / bestbw, jnp.inf)
+    # files the job still needs at s (zero-bw guard -> inf cost survives)
+    miss = required[:, :, None] & ~presence.T[None, :, :]    # [J, F, S]
+    t = jnp.sum(jnp.where(miss, t_fs[None], 0.0), axis=1)    # [J, S]
+    cost = jnp.maximum(t, rel[None, :])
+    return jnp.where(online[None, :], cost, jnp.inf)
+
+
+class JaxShortestTransferBroker(JaxScheduler):
+    """Vectorized ``shortesttransfer`` dispatch over a shared snapshot.
+
+    Mirrors :meth:`repro.core.scheduler.ShortestTransferScheduler.
+    select_site` — including the durable-masters rule and the zero-bandwidth
+    guard — but costs every (job, site) pair at once against a
+    point-bandwidth matrix built from the NetworkEngine's per-link
+    bandwidth/occupancy arrays. Like the dataaware batch broker, all jobs
+    in a batch see the same snapshot (queued work is not updated between
+    batch members).
+    """
+
+    def __init__(self, catalog: ReplicaCatalog, topology: GridTopology,
+                 network) -> None:
+        super().__init__(catalog, topology)
+        self.network = network
+        self.masters = np.array(
+            [catalog.files[l].master_site for l in self.lfns], np.intp)
+        n = topology.n_sites
+        path = np.full((n, n, network.max_links), -1, np.int32)
+        for h in range(n):
+            for s in range(n):
+                ids = topology.link_ids_for(h, s)
+                path[h, s, : len(ids)] = ids
+        self.path = jnp.asarray(path)
+        self.path_valid = jnp.asarray(path >= 0)
+
+    def select_batch(self, required_sets: list[list[str]]) -> list[int]:
+        presence = self.presence_np()
+        load, cap, online = self.site_state_np()
+        # fetchable = online holder, or the durable master copy
+        files = np.arange(len(self.lfns))
+        fetch_mask = presence & online[:, None]
+        fetch_mask[self.masters, files] |= presence[self.masters, files]
+        costs = st_costs_batch(
+            self.path, self.path_valid,
+            jnp.asarray(self.network.link_bw, jnp.float32),
+            jnp.asarray(self.network.link_act, jnp.float32),
+            jnp.asarray(presence), jnp.asarray(fetch_mask), self.sizes,
+            jnp.asarray(self.required_np(required_sets)),
+            jnp.asarray(load / cap), jnp.asarray(online))
+        return [int(i) for i in jnp.argmin(costs, axis=1)]

@@ -35,6 +35,7 @@ def run_experiment(
     batch_window: float = 0.0,
     arrival_burst: int = 1,
     arrival_times: Sequence[float] | None = None,
+    net: str = "numpy",
 ) -> ExperimentResult:
     """One full simulation run (the unit behind every paper figure).
 
@@ -54,12 +55,19 @@ def run_experiment(
     ``failures`` is a list of ``(site, at, duration)`` outages and
     ``slowdowns`` a list of ``(site, at, duration, factor)`` stragglers;
     see :mod:`repro.fault.failures` for spec-driven generation.
+
+    ``net`` picks the network-engine backend (see
+    :data:`repro.core.simulator.NETS`): ``"numpy"`` incremental re-rating,
+    ``"pallas"`` the vectorized/kernel full re-rate, ``"topmost"`` the
+    legacy single-uplink accounting (fidelity baseline). Identical results
+    on two-level grids under all of them.
     """
-    topology = build_topology(cfg)
+    topology = build_topology(
+        cfg, path_model="topmost" if net == "topmost" else "full")
     catalog = build_catalog(cfg, topology)
     sim = GridSimulator(topology, catalog, scheduler=scheduler, strategy=strategy,
                         seed=cfg.seed, speculative_backups=speculative_backups,
-                        broker=broker, batch_window=batch_window)
+                        broker=broker, batch_window=batch_window, net=net)
     for info in catalog.files.values():
         sim.storage.bootstrap(info.master_site, info.lfn)
     jobs = generate_jobs(cfg, n_jobs)

@@ -24,6 +24,7 @@ import random as _random
 
 from .replica import STRATEGIES
 from .scheduler import SCHEDULERS
+from .simulator import NETS
 from .workload import GridConfig
 
 ARRIVALS = ("uniform", "poisson", "flash_crowd", "diurnal")
@@ -72,8 +73,11 @@ class ScenarioSpec:
     duration)`` failures via :func:`repro.fault.failures.churn_schedule`;
     ``slowdowns`` are literal ``(site, at, duration, factor)`` stragglers.
 
-    *Engine* — scheduler / replication strategy / broker registry names and
-    the seeds to run (one simulation per seed).
+    *Engine* — scheduler / replication strategy / broker registry names,
+    the network-engine backend ``net`` (``numpy`` | ``pallas`` |
+    ``pallas-interpret`` | ``topmost``, see
+    :class:`repro.core.network.NetworkEngine`) and the seeds to run (one
+    simulation per seed).
 
     Specs are frozen; derive variants with ``dataclasses.replace`` and
     serialize with :meth:`to_dict` / :meth:`from_dict` (exact round-trip,
@@ -115,6 +119,7 @@ class ScenarioSpec:
     strategy: str = "hrs"
     broker: str = "event"
     batch_window_s: float = 0.0
+    net: str = "numpy"
     seeds: tuple[int, ...] = (0,)
 
     def __post_init__(self) -> None:
@@ -138,6 +143,9 @@ class ScenarioSpec:
                              f"{sorted(STRATEGIES)})")
         if self.broker not in BROKERS:
             raise ValueError(f"{self.name}: unknown broker {self.broker!r}")
+        if self.net not in NETS:
+            raise ValueError(f"{self.name}: unknown net engine "
+                             f"{self.net!r} (want one of {NETS})")
         if not self.seeds:
             raise ValueError(f"{self.name}: need at least one seed")
 
@@ -353,6 +361,30 @@ register_scenario(ScenarioSpec(
     probes="fault-tolerance axis; replica durability",
     churn=ChurnSpec(n_failures=6, window=(1000.0, 30000.0),
                     mean_downtime_s=4000.0),
+))
+
+register_scenario(ScenarioSpec(
+    name="deep_contended",
+    description="A 4-tier hierarchy (3 clusters x 3 groups x 6 sites) with "
+                "a fat 100 Mbps top tier over thin 10 Mbps group uplinks: "
+                "cross-cluster transfers squeeze through a thin mid-tier "
+                "link the legacy topmost-uplink model never contended.",
+    probes="mid-tier path contention (net='numpy' vs net='topmost'; "
+           "benchmarks/run.py net_sweep)",
+    tier_fanouts=(3, 3, 6),
+    uplink_mbps=(100.0, 10.0),
+))
+
+register_scenario(ScenarioSpec(
+    name="bulk_shortest",
+    description="Bulk submission placed by the vectorized shortest-transfer "
+                "broker: each 50-job burst is costed against a "
+                "point-bandwidth matrix snapshot of the per-link arrays "
+                "and dispatched as one jitted decision.",
+    probes="multi-backend brokers (shortesttransfer under broker='jax')",
+    scheduler="shortesttransfer",
+    arrival_burst=50,
+    broker="jax",
 ))
 
 register_scenario(ScenarioSpec(

@@ -7,15 +7,20 @@ Implements the full job lifecycle of the paper:
   done.  Job time = max(transfer time, queue time) + processing time, which is
   what the event ordering below produces naturally.
 
-Network: event-driven fair-share links with re-rating (each transfer's rate is
-the min over its links of bandwidth/active). This reproduces GridSim's
-contention behaviour — the WAN uplink saturates under inter-region traffic —
-without a packet simulator.
+Network: event-driven fair-share links with re-rating (each transfer's rate
+is the min over *every* link it crosses of bandwidth/active — the full
+source-side uplink path, so mid-tier congestion is real on deep trees).
+This reproduces GridSim's contention behaviour — the WAN uplink saturates
+under inter-region traffic — without a packet simulator. The fluid model
+lives in :class:`repro.core.network.NetworkEngine`; the ``net=`` flag picks
+its backend (``"numpy"`` incremental re-rating, ``"pallas"`` the vectorized
+kernel path, ``"topmost"`` the legacy single-uplink accounting).
 
 Engine hot paths are built for 10k-job scale:
-  * transfer state (remaining bytes, rate, link membership) lives in
-    slot-indexed numpy arrays; advancing the fluid model and scanning for the
-    next completion are vectorized instead of per-transfer Python loops;
+  * transfer state (remaining bytes, rate, link-path membership) lives in
+    slot-indexed numpy arrays inside the NetworkEngine; advancing the fluid
+    model and scanning for the next completion are vectorized instead of
+    per-transfer Python loops;
   * re-rating is incremental: only transfers sharing a link whose membership
     changed are re-rated (rates are pure functions of link occupancy, so this
     is exactly equivalent to a full recompute — bit-identical results);
@@ -45,12 +50,11 @@ import heapq
 import random as _random
 from typing import Optional
 
-import numpy as np
-
 from .catalog import ReplicaCatalog
+from .network import BACKENDS, NetworkEngine
 from .replica import FetchPlan, ReplicaStrategy, StorageState, make_strategy
 from .scheduler import Job, SchedulerPolicy, make_scheduler
-from .topology import GridTopology, Link
+from .topology import GridTopology
 
 
 # --------------------------------------------------------------------------
@@ -59,17 +63,17 @@ from .topology import GridTopology, Link
 (SUBMIT, NET, CPU_DONE, FAIL, RECOVER, SLOW_START, SLOW_END, WATCHDOG,
  FLUSH) = range(9)
 
-# A transfer is complete when less than one byte remains. Sub-byte residue
-# left by float rounding must count as done, otherwise the event loop can
-# starve: eta increments below the clock's ulp make dt == 0 forever.
-_DONE_EPS = 1.0
+#: Values the ``net=`` engine flag accepts: NetworkEngine backends plus
+#: ``"topmost"``, which keeps the numpy backend over a topology built with
+#: the legacy topmost-uplink accounting (fidelity baseline for benchmarks).
+NETS = BACKENDS + ("topmost",)
 
 
 @dataclasses.dataclass(eq=False)
 class _Transfer:
     tid: int
     plan: FetchPlan
-    links: list[Link]
+    link_ids: tuple[int, ...]    # full source-side path, unified link space
     slot: int = -1
     waiters: list["_JobState"] = dataclasses.field(default_factory=list)
 
@@ -140,6 +144,7 @@ class GridSimulator:
         straggler_threshold: float = 3.0,
         broker: str = "event",
         batch_window: float = 0.0,
+        net: str = "numpy",
     ) -> None:
         self.topology = topology
         self.catalog = catalog
@@ -156,14 +161,38 @@ class GridSimulator:
         self.speculative_backups = speculative_backups
         self.straggler_threshold = straggler_threshold
         self.batch_window = batch_window
-        if broker == "jax":
-            if self.scheduler.name != "dataaware":
+        if net not in NETS:
+            raise ValueError(f"unknown net engine {net!r} (want one of {NETS})")
+        if net == "topmost":
+            # legacy model: contend only on the topmost crossed uplink.
+            # Path construction is owned by the topology (it covers the
+            # engine, Link.active accounting and point_bandwidth alike),
+            # so the topology must have been *built* that way — mutating
+            # the caller's topology here would silently corrupt any other
+            # simulator sharing it. run_experiment(net="topmost") builds
+            # the right topology automatically.
+            if topology.path_model != "topmost":
                 raise ValueError(
-                    "broker='jax' implements only the paper's dataaware "
-                    f"policy; got scheduler {self.scheduler.name!r}")
-            from .jaxsched import JaxScheduler   # deferred: pulls in jax
-            self._jax_broker: Optional["JaxScheduler"] = JaxScheduler(
-                catalog, topology)
+                    "net='topmost' requires a topology built with "
+                    "path_model='topmost' (GridTopology(..., "
+                    "path_model='topmost'), or run_experiment(net="
+                    "'topmost') which does this for you)")
+            net = "numpy"
+        self.network = NetworkEngine(topology, backend=net)
+        if broker == "jax":
+            # deferred imports: jaxsched pulls in jax
+            if self.scheduler.name == "dataaware":
+                from .jaxsched import JaxScheduler
+                self._jax_broker = JaxScheduler(catalog, topology)
+            elif self.scheduler.name == "shortesttransfer":
+                from .jaxsched import JaxShortestTransferBroker
+                self._jax_broker = JaxShortestTransferBroker(
+                    catalog, topology, self.network)
+            else:
+                raise ValueError(
+                    "broker='jax' implements only the 'dataaware' and "
+                    "'shortesttransfer' policies; got scheduler "
+                    f"{self.scheduler.name!r}")
         elif broker == "event":
             if batch_window > 0:
                 raise ValueError(
@@ -179,27 +208,9 @@ class GridSimulator:
         self._seq = 0
         self.now = 0.0
         self._net_version = 0
-        self._net_last = 0.0
         self._transfers: dict[int, _Transfer] = {}
         self._inflight: dict[tuple[int, str], _Transfer] = {}
         self._tid = 0
-        # -- vectorized transfer state, slot-indexed -----------------------
-        self._net_cap = 64
-        self._t_rem = np.zeros(self._net_cap)
-        self._t_rate = np.zeros(self._net_cap)
-        self._t_src = np.zeros(self._net_cap, np.intp)
-        self._t_reg = np.full(self._net_cap, -1, np.intp)
-        self._t_active = np.zeros(self._net_cap, bool)
-        self._t_obj: list[Optional[_Transfer]] = [None] * self._net_cap
-        self._free_slots = list(range(self._net_cap - 1, -1, -1))
-        self._nic_members: list[set[int]] = [set() for _ in topology.sites]
-        self._wan_members: list[set[int]] = [set() for _ in topology.wan_links]
-        self._nic_bw = np.array([l.bandwidth for l in topology.nic_links])
-        self._wan_bw = np.array([l.bandwidth for l in topology.wan_links])
-        # numpy mirrors of Link.active (simulator is the only writer); small
-        # integer counts, so the float64 mirror is exact
-        self._nic_act = np.array([float(l.active) for l in topology.nic_links])
-        self._wan_act = np.array([float(l.active) for l in topology.wan_links])
         # per-site CPU: FIFO queue of ready jobs + the running job. Cancelled
         # jobs stay queued as tombstones (done=True) and are skipped on pop.
         self._cpu_queue: dict[int, collections.deque[_JobState]] = {
@@ -252,103 +263,20 @@ class GridSimulator:
 
     # -- network -----------------------------------------------------------
     #
-    # The fluid model: remaining bytes drain at `rate` = min over the
-    # transfer's links of bandwidth/active. `_net_advance` integrates all
-    # active transfers to `now`; `_net_rerate` refreshes the rates of the
-    # transfers named by the changed links and schedules the next completion
-    # wake-up (versioned: a stale NET event is a no-op).
-    def _slot_alloc(self, tr: _Transfer, size: float) -> None:
-        if not self._free_slots:
-            old = self._net_cap
-            self._net_cap = old * 2
-            self._t_rem = np.concatenate([self._t_rem, np.zeros(old)])
-            self._t_rate = np.concatenate([self._t_rate, np.zeros(old)])
-            self._t_src = np.concatenate([self._t_src, np.zeros(old, np.intp)])
-            self._t_reg = np.concatenate([self._t_reg, np.full(old, -1, np.intp)])
-            self._t_active = np.concatenate([self._t_active,
-                                             np.zeros(old, bool)])
-            self._t_obj.extend([None] * old)
-            self._free_slots.extend(range(self._net_cap - 1, old - 1, -1))
-        slot = self._free_slots.pop()
-        tr.slot = slot
-        src = tr.plan.src
-        # an inter-region transfer traverses [nic, uplink] (see links_for);
-        # ``reg`` is the uplink's index into topology.wan_links (== the
-        # source region id on two-level trees, a deeper uplink otherwise)
-        reg = self.topology.uplink_index(src, tr.plan.dst) if len(tr.links) > 1 else -1
-        self._t_rem[slot] = size
-        self._t_rate[slot] = 0.0
-        self._t_src[slot] = src
-        self._t_reg[slot] = reg
-        self._t_active[slot] = True
-        self._t_obj[slot] = tr
-        self._nic_members[src].add(slot)
-        self._nic_act[src] += 1.0
-        if reg >= 0:
-            self._wan_members[reg].add(slot)
-            self._wan_act[reg] += 1.0
-
-    def _slot_release(self, tr: _Transfer) -> None:
-        slot = tr.slot
-        src, reg = int(self._t_src[slot]), int(self._t_reg[slot])
-        self._t_active[slot] = False
-        self._t_rate[slot] = 0.0
-        self._t_rem[slot] = 0.0
-        self._t_obj[slot] = None
-        self._nic_members[src].discard(slot)
-        self._nic_act[src] -= 1.0
-        if reg >= 0:
-            self._wan_members[reg].discard(slot)
-            self._wan_act[reg] -= 1.0
-        self._free_slots.append(slot)
-        tr.slot = -1
-
+    # The fluid model lives in self.network (NetworkEngine): remaining bytes
+    # drain at `rate` = min over the transfer's full link path of
+    # bandwidth/active. `_net_advance` integrates all active transfers to
+    # `now`; `_net_rerate` refreshes the rates of the transfers on the
+    # changed links and schedules the next completion wake-up (versioned: a
+    # stale NET event is a no-op).
     def _net_advance(self) -> None:
-        dt = self.now - self._net_last
-        if dt > 0:
-            np.maximum(self._t_rem - self._t_rate * dt, 0.0, out=self._t_rem)
-        self._net_last = self.now
+        self.network.advance(self.now)
 
-    def _rate_slots(self, slots: set[int]) -> None:
-        """Recompute rate = min over links of bandwidth/active for ``slots``.
-        Pure function of current link occupancy, so re-rating a slot twice
-        (a transfer can sit in both a changed NIC and a changed WAN group)
-        is harmless."""
-        n = len(slots)
-        if n == 0:
-            return
-        if n <= 4:      # numpy call overhead dominates tiny groups
-            for sl in slots:
-                src, reg = self._t_src[sl], self._t_reg[sl]
-                r = self._nic_bw[src] / max(1.0, self._nic_act[src])
-                if reg >= 0:
-                    r = min(r, self._wan_bw[reg] / max(1.0, self._wan_act[reg]))
-                self._t_rate[sl] = r
-            return
-        idx = np.fromiter(slots, np.intp, n)
-        src = self._t_src[idx]
-        rate = self._nic_bw[src] / np.maximum(1.0, self._nic_act[src])
-        reg = self._t_reg[idx]
-        m = reg >= 0
-        if m.any():
-            wr = reg[m]
-            rate[m] = np.minimum(
-                rate[m], self._wan_bw[wr] / np.maximum(1.0, self._wan_act[wr]))
-        self._t_rate[idx] = rate
-
-    def _net_rerate(self, sites: tuple[int, ...] = (),
-                    regions: tuple[int, ...] = ()) -> None:
-        for s in sites:
-            self._rate_slots(self._nic_members[s])
-        for r in regions:
-            self._rate_slots(self._wan_members[r])
+    def _net_rerate(self, changed: tuple[int, ...] = ()) -> None:
+        eta = self.network.rerate(changed, self.now)
         self._net_version += 1
-        if self._transfers:
-            live = self._t_rate > 0.0   # released slots are zeroed, so live ⊆ active
-            if live.any():
-                nxt = float(np.min(self.now
-                                   + self._t_rem[live] / self._t_rate[live]))
-                self._push(nxt, NET, self._net_version)
+        if eta is not None:
+            self._push(eta, NET, self._net_version)
 
     def _start_transfer(self, plan: FetchPlan, js: _JobState) -> None:
         key = (plan.dst, plan.lfn)
@@ -358,9 +286,7 @@ class GridSimulator:
             return
         self._net_advance()
         size = self.catalog.size(plan.lfn)
-        links = self.topology.links_for(plan.src, plan.dst)
-        for l in links:
-            l.active += 1
+        link_ids = self.topology.link_ids_for(plan.src, plan.dst)
         # evictions + space reservation happen at transfer start
         if plan.store:
             for victim in plan.evictions:
@@ -368,9 +294,9 @@ class GridSimulator:
             self.topology.sites[plan.dst].used_storage += size  # reserve
         self.storage.pin(plan.src, plan.lfn)   # source can't be evicted mid-copy
         self._tid += 1
-        tr = _Transfer(self._tid, plan, links, waiters=[js])
+        tr = _Transfer(self._tid, plan, link_ids, waiters=[js])
         self._transfers[tr.tid] = tr
-        self._slot_alloc(tr, size)
+        self.network.alloc(tr, size, link_ids)
         if plan.store:
             self._inflight[key] = tr
         if plan.inter_region:
@@ -379,17 +305,13 @@ class GridSimulator:
             self.total_wan_bytes += size
         else:
             self.total_lan_bytes += size
-        reg = int(self._t_reg[tr.slot])
-        self._net_rerate((plan.src,), (reg,) if reg >= 0 else ())
+        self._net_rerate(link_ids)
 
     def _finish_transfer(self, tr: _Transfer) -> None:
         plan = tr.plan
         self._transfers.pop(tr.tid, None)
         self._inflight.pop((plan.dst, plan.lfn), None)
-        src_site, reg = int(self._t_src[tr.slot]), int(self._t_reg[tr.slot])
-        self._slot_release(tr)
-        for l in tr.links:
-            l.active -= 1
+        link_ids = self.network.release(tr)
         self.storage.unpin(plan.src, plan.lfn)
         self.storage.touch(plan.src, plan.lfn, self.now)
         if plan.store:
@@ -407,25 +329,18 @@ class GridSimulator:
                 js.temp_files.append(plan.lfn)
             js.pending_transfers -= 1
             self._fetch_next(js)
-        self._net_rerate((src_site,), (reg,) if reg >= 0 else ())
+        self._net_rerate(link_ids)
 
     def _abort_transfers_touching(self, site: int) -> None:
         """Failure handling: drop transfers with src or dst at a failed site."""
         self._net_advance()
         dead = [t for t in self._transfers.values()
                 if t.plan.src == site or t.plan.dst == site]
-        sites_ch: set[int] = set()
-        regs_ch: set[int] = set()
+        changed: set[int] = set()
         for tr in dead:
             self._transfers.pop(tr.tid, None)
             self._inflight.pop((tr.plan.dst, tr.plan.lfn), None)
-            sites_ch.add(int(self._t_src[tr.slot]))
-            reg = int(self._t_reg[tr.slot])
-            if reg >= 0:
-                regs_ch.add(reg)
-            self._slot_release(tr)
-            for l in tr.links:
-                l.active -= 1
+            changed.update(self.network.release(tr))
             if self.topology.sites[tr.plan.src].online or \
                self.catalog.has_replica(tr.plan.lfn, tr.plan.src):
                 self.storage.unpin(tr.plan.src, tr.plan.lfn)
@@ -439,7 +354,7 @@ class GridSimulator:
                 js.missing.insert(0, tr.plan.lfn)
                 js.pending_transfers -= 1
                 self._fetch_next(js)
-        self._net_rerate(tuple(sites_ch), tuple(regs_ch))
+        self._net_rerate(tuple(sorted(changed)))
 
     # -- job lifecycle -----------------------------------------------------
     #
@@ -650,7 +565,7 @@ class GridSimulator:
 
     # -- main loop -----------------------------------------------------------
     def run(self, until: float = float("inf")) -> SimResult:
-        self._net_last = 0.0
+        self.network.last = 0.0
         while self._q:
             t, _, kind, payload = heapq.heappop(self._q)
             if t > until:
@@ -679,10 +594,9 @@ class GridSimulator:
                 if payload != self._net_version:
                     continue
                 self._net_advance()
-                done_idx = np.nonzero(self._t_active
-                                      & (self._t_rem <= _DONE_EPS))[0]
+                done_idx = self.network.completions()
                 if done_idx.size:
-                    done = sorted((self._t_obj[i] for i in done_idx),
+                    done = sorted((self.network.obj[i] for i in done_idx),
                                   key=lambda tr: tr.tid)
                     for tr in done:
                         self._finish_transfer(tr)

@@ -19,12 +19,17 @@ inter-communication metric counts transfers that leave them.
 Bandwidth model (source-side): each site has an outbound NIC at LAN speed.
 A transfer that stays inside its leaf group is bottlenecked by the source
 NIC. A transfer that leaves the group is accounted on the source NIC plus
-the *topmost* uplink it crosses on the source side — in a hierarchy whose
-bandwidth decreases going up the tree (the interesting regime, and the
-paper's configuration: 10 Mbps WAN vs 1000 Mbps LAN) that uplink is the
-bottleneck; the faster uplinks below it are not modeled as contended. For
-two-level trees this reduces exactly to the paper's {source NIC, source
-region WAN uplink} rule. Links are fair-shared among concurrent transfers.
+**every** uplink it crosses on the source side (``uplink_path``): its rate
+is the min over those links of each link's fair share, so a thin mid-tier
+uplink saturated by through-traffic throttles transfers even when the
+topmost crossed link is fat. For two-level trees the path is just {source
+NIC, source-region WAN uplink} — exactly the paper's rule. Links are
+fair-shared among concurrent transfers.
+
+``path_model`` selects the accounting: ``"full"`` (default, the per-link
+path above) or ``"topmost"`` — the pre-refactor legacy model that contends
+only on the topmost crossed uplink, kept so the fidelity gap is measurable
+(``benchmarks/run.py net_sweep``; the ``net="topmost"`` engine flag).
 
 Heterogeneity knobs (all optional, defaults reproduce the paper):
   * ``uplink_scale``: per-uplink bandwidth multipliers, e.g. a "fat region"
@@ -112,7 +117,12 @@ class GridTopology:
         uplink_scale: Sequence[tuple[int, int, float]] = (),
         storage_scale: Sequence[tuple[int, float]] = (),
         storage_capacities: Iterable[float] | None = None,
+        path_model: str = "full",
     ) -> None:
+        if path_model not in ("full", "topmost"):
+            raise ValueError(f"path_model must be 'full' or 'topmost', "
+                             f"got {path_model!r}")
+        self.path_model = path_model
         fanouts = (tuple(tier_fanouts) if tier_fanouts is not None
                    else (n_regions, sites_per_region))
         if len(fanouts) < 2 or any(f < 1 for f in fanouts):
@@ -217,6 +227,14 @@ class GridTopology:
                 self.wan_links.append(
                     Link(f"up{level}.{node}", bw * scale.get((level, node), 1.0)))
         self.nic_links = [Link(f"nic{s.site_id}", lan_bandwidth) for s in self.sites]
+        # Per-site uplink ids, top-down: _site_uplinks[s][lvl] is the index
+        # into wan_links of the uplink owned by s's ancestor at internal
+        # level lvl+1. uplink_path slices this table from the divergence
+        # level, so path queries stay O(depth).
+        self._site_uplinks: list[tuple[int, ...]] = [
+            tuple(off + a for off, a in zip(self._uplink_offset, self._anc[s]))
+            for s in range(n_sites)
+        ]
 
     # -- structure queries ------------------------------------------------
     @property
@@ -261,12 +279,38 @@ class GridTopology:
                 return off + x
         raise AssertionError("ancestor tables inconsistent")
 
+    def uplink_path(self, src: int, dst: int) -> tuple[int, ...]:
+        """Indices into ``wan_links`` of every uplink a src->dst transfer
+        crosses on the source side, topmost first; ``()`` for intra-region.
+
+        Under ``path_model="topmost"`` this degrades to the legacy
+        single-uplink accounting (the topmost crossed link only). For
+        two-level trees both models return the same one-element path.
+        """
+        a = self._anc[src]
+        b = self._anc[dst]
+        if a[-1] == b[-1]:
+            return ()
+        for lvl, (x, y) in enumerate(zip(a, b)):
+            if x != y:
+                if self.path_model == "topmost":
+                    return (self._site_uplinks[src][lvl],)
+                return self._site_uplinks[src][lvl:]
+        raise AssertionError("ancestor tables inconsistent")
+
     def links_for(self, src: int, dst: int) -> list[Link]:
-        """Links traversed by a src->dst transfer (source-side model)."""
-        u = self.uplink_index(src, dst)
-        if u < 0:
-            return [self.nic_links[src]]
-        return [self.nic_links[src], self.wan_links[u]]
+        """Links traversed by a src->dst transfer (source-side model):
+        the source NIC plus every crossed uplink (see ``uplink_path``)."""
+        return [self.nic_links[src]] + [
+            self.wan_links[u] for u in self.uplink_path(src, dst)]
+
+    def link_ids_for(self, src: int, dst: int) -> tuple[int, ...]:
+        """``links_for`` as indices into the unified link space used by
+        :class:`repro.core.network.NetworkEngine`: NICs occupy ids
+        ``0..n_sites-1`` (id == site id) and ``wan_links[i]`` is id
+        ``n_sites + i``."""
+        n = len(self.sites)
+        return (src,) + tuple(n + u for u in self.uplink_path(src, dst))
 
     def point_bandwidth(self, src: int, dst: int) -> float:
         """Available bandwidth if one more transfer joined src->dst.
@@ -278,8 +322,7 @@ class GridTopology:
         """
         nic = self.nic_links[src]
         bw = nic.bandwidth / max(1, nic.active + 1)
-        u = self.uplink_index(src, dst)
-        if u >= 0:
+        for u in self.uplink_path(src, dst):
             wan = self.wan_links[u]
             wbw = wan.bandwidth / max(1, wan.active + 1)
             if wbw < bw:

@@ -90,7 +90,7 @@ class GridConfig:
         return self.n_regions * self.sites_per_region
 
 
-def build_topology(cfg: GridConfig) -> GridTopology:
+def build_topology(cfg: GridConfig, path_model: str = "full") -> GridTopology:
     return GridTopology(
         cfg.n_regions, cfg.sites_per_region,
         lan_bandwidth=cfg.lan_bandwidth, wan_bandwidth=cfg.wan_bandwidth,
@@ -98,6 +98,7 @@ def build_topology(cfg: GridConfig) -> GridTopology:
         tier_fanouts=cfg.tier_fanouts,
         uplink_bandwidths=cfg.uplink_bandwidths,
         uplink_scale=cfg.uplink_scale, storage_scale=cfg.storage_scale,
+        path_model=path_model,
     )
 
 

@@ -1,0 +1,4 @@
+from .ops import net_rerate
+from .ref import net_rerate_ref
+
+__all__ = ["net_rerate", "net_rerate_ref"]

@@ -1,0 +1,59 @@
+"""Public wrapper for the net re-rate (pallas / interpret / numpy ref).
+
+Unlike the model kernels this op is called from the discrete-event loop
+(host code, once per link-occupancy change), so the wrapper returns host
+numpy values and picks the backend per call:
+
+  * ``"auto"``   — the compiled Pallas kernel on TPU; the float64 numpy
+    oracle on CPU (no per-event jax dispatch overhead, bit-identical to
+    the incremental engine backend). This is what ``net="pallas"`` uses.
+  * ``"pallas"`` — force the compiled kernel. Compiled TPU execution is
+    float32 (no f64 on TPU): ~1e-7 relative rate drift vs the oracle, so
+    the engine's bit-identity contract covers the CPU routes only.
+  * ``"interpret"`` — the kernel under the Pallas interpreter with x64
+    enabled: slow, but bit-identical to the oracle; used by the kernel
+    tests and the ``net="pallas-interpret"`` engine flag.
+  * ``"numpy"``  — the oracle directly.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .ref import net_rerate_ref
+
+
+def net_rerate(path, rem, link_bw, link_act, now, *, backend: str = "auto"
+               ) -> tuple[np.ndarray, float]:
+    """Re-rate transfer slots and scan for the next completion.
+
+    See :func:`.ref.net_rerate_ref` for the argument contract. Returns a
+    host ``(rate, eta)`` pair regardless of backend.
+    """
+    if backend in ("auto", "pallas", "interpret"):
+        import jax
+
+        if backend == "pallas" or (backend == "auto"
+                                   and jax.default_backend() == "tpu"):
+            from .kernel import net_rerate_kernel
+            rate, eta = net_rerate_kernel(
+                np.asarray(path, np.int32), np.asarray(rem, np.float32),
+                np.asarray(link_bw, np.float32),
+                np.asarray(link_act, np.float32), np.float32(now))
+            return np.asarray(rate, np.float64), float(eta)
+        if backend == "interpret":
+            from jax.experimental import enable_x64
+
+            from .kernel import net_rerate_kernel
+            with enable_x64():
+                rate, eta = net_rerate_kernel(
+                    np.asarray(path, np.int32), np.asarray(rem, np.float64),
+                    np.asarray(link_bw, np.float64),
+                    np.asarray(link_act, np.float64), np.float64(now),
+                    interpret=True)
+            return np.asarray(rate, np.float64), float(eta)
+        backend = "numpy"
+    if backend != "numpy":
+        raise ValueError(f"unknown net_rerate backend {backend!r} "
+                         "(want 'auto'|'pallas'|'interpret'|'numpy')")
+    return net_rerate_ref(path, rem, link_bw, link_act, now)

@@ -1,0 +1,56 @@
+"""Vectorized float64 oracle for the fluid-network re-rate.
+
+One full recompute of the fair-share fluid model over a batch of transfer
+slots: each slot's rate is the min over its link path of
+``bandwidth / max(1, active)``, and the next completion time is the min of
+``now + remaining / rate`` over live slots. The per-element operations
+(divide, min) are exact IEEE ops, so this full recompute is bit-identical
+to the incremental per-link re-rating the numpy engine backend does — both
+are the same pure function of link occupancy.
+
+This is also the CPU fast path behind ``net="pallas"``: the Pallas kernel
+(``kernel.py``) computes exactly this and is validated against it in
+``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def net_rerate_ref(path: np.ndarray, rem: np.ndarray, link_bw: np.ndarray,
+                   link_act: np.ndarray, now: float
+                   ) -> tuple[np.ndarray, float]:
+    """Re-rate a batch of transfer slots.
+
+    Args:
+      path: ``(slots, max_links)`` int link-index matrix, ``-1``-padded.
+        Row i lists every link transfer i crosses (source NIC first, then
+        uplinks top-down).
+      rem: ``(slots,)`` remaining bytes per transfer.
+      link_bw: ``(links,)`` aggregate bandwidth per link.
+      link_act: ``(links,)`` concurrent-transfer count per link (float).
+      now: current simulation time.
+
+    Returns ``(rate, eta)``: per-slot rates (min fair share over the row's
+    links; 0.0 for all-padding rows) and the earliest completion time
+    (``inf`` when no slot has a positive rate).
+    """
+    path = np.asarray(path)
+    rem = np.asarray(rem, dtype=np.float64)
+    if path.shape[0] == 0:
+        return np.zeros(0), float("inf")
+    valid = path >= 0
+    safe = np.where(valid, path, 0)
+    # per-link share once (O(links)), then one gather — same divisions the
+    # incremental backend does per slot, so still bit-identical
+    share_links = link_bw / np.maximum(1.0, link_act)
+    share = np.where(valid, share_links[safe], np.inf)
+    rate = share.min(axis=1)
+    rate = np.where(valid.any(axis=1), rate, 0.0)
+    live = rate > 0.0
+    if live.any():
+        eta = float(np.min(now + rem[live] / rate[live]))
+    else:
+        eta = float("inf")
+    return rate, eta

@@ -49,6 +49,7 @@ def run_spec(spec: ScenarioSpec, *, seed: int | None = None,
         broker=spec.broker, batch_window=spec.batch_window_s,
         arrival_burst=spec.arrival_burst,
         arrival_times=arrival_schedule(spec, n, seed=seed),
+        net=spec.net,
     )
 
 
@@ -105,13 +106,16 @@ def _with_axis(spec: ScenarioSpec, axis: str, value) -> ScenarioSpec:
             spec, uplink_mbps=(float(value),) + spec.uplink_mbps[1:])
     if axis == "scheduler":
         return dataclasses.replace(spec, scheduler=str(value))
+    if axis == "net":
+        return dataclasses.replace(spec, net=str(value))
     raise ValueError(f"unknown sweep axis {axis!r}")
 
 
 def sweep(base: ScenarioSpec, *, axis: str, values: Sequence,
           strategies: Sequence[str]) -> dict[tuple, ExperimentResult]:
-    """Cross an axis (``n_jobs`` | ``wan_mbps`` | ``scheduler``) with a set
-    of replication strategies; returns ``{(value, strategy): result}``.
+    """Cross an axis (``n_jobs`` | ``wan_mbps`` | ``scheduler`` | ``net``)
+    with a set of replication strategies; returns
+    ``{(value, strategy): result}``.
 
     This is the config-driven backbone of the per-figure benchmarks: each
     cell is ``run_spec`` of the base scenario with two fields replaced.

@@ -18,6 +18,7 @@ import dataclasses
 
 from repro.core import (ChurnSpec, SCENARIOS, STRATEGIES, SCHEDULERS,
                         ScenarioSpec, get_scenario)
+from repro.core.simulator import NETS
 from repro.launch.experiments import run_spec
 
 
@@ -37,6 +38,9 @@ def main() -> None:
     ap.add_argument("--regions", type=int, default=4)
     ap.add_argument("--sites", type=int, default=13)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--net", default=None, choices=list(NETS),
+                    help="network-engine backend (default: the scenario's, "
+                         "or 'numpy'; 'topmost' = legacy single-uplink model)")
     ap.add_argument("--failures", type=int, default=0,
                     help="number of random site failures to inject")
     args = ap.parse_args()
@@ -57,6 +61,8 @@ def main() -> None:
             tier_fanouts=(args.regions, args.sites),
             lan_mbps=args.lan_mbps, uplink_mbps=(args.wan_mbps,),
             scheduler=args.scheduler, churn=churn, seeds=(args.seed,))
+    if args.net is not None:
+        spec = dataclasses.replace(spec, net=args.net)
     print(f"{'strategy':>14} {'avg_job_time':>13} {'inter/job':>10} "
           f"{'WAN GB':>8} {'makespan':>10}")
     for strat in args.strategy:

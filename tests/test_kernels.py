@@ -8,6 +8,7 @@ import pytest
 
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
 from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.net_rerate import net_rerate, net_rerate_ref
 from repro.kernels.selective_scan.kernel import selective_scan_kernel
 from repro.kernels.selective_scan.ref import selective_scan_ref
 
@@ -84,6 +85,64 @@ def test_selective_scan_matches_oracle(Bz, S, Di, N, chunk, bd, dtype):
                                atol=TOL[dtype] * 10, rtol=TOL[dtype] * 10)
     np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
                                atol=TOL[dtype] * 10, rtol=TOL[dtype] * 10)
+
+
+def _net_rerate_case(seed, slots, links, levels):
+    """Random but realistic re-rate inputs: every slot crosses a NIC-like
+    first link plus 0..levels-1 uplinks."""
+    rng = np.random.default_rng(seed)
+    path = np.where(rng.random((slots, levels)) < 0.35, -1,
+                    rng.integers(0, links, (slots, levels)))
+    path[:, 0] = rng.integers(0, links, slots)
+    rem = rng.random(slots) * 1e9
+    bw = rng.random(links) * 1e8 + 1e5
+    act = rng.integers(0, 12, links).astype(float)
+    return path, rem, bw, act
+
+
+@pytest.mark.parametrize("seed,slots,links,levels", [
+    (0, 1, 4, 2),            # single transfer, two-level shape
+    (1, 37, 23, 4),          # ragged (pads to lane/sublane multiples)
+    (2, 256, 60, 5),         # deep 5-tier path shape
+    (3, 1000, 500, 3),       # wide link space
+])
+def test_net_rerate_interpret_matches_oracle(seed, slots, links, levels):
+    """The Pallas re-rate kernel under x64 interpret mode is *bit-identical*
+    to the float64 numpy oracle (divide/min are exact IEEE ops) — the same
+    contract the golden-metrics suite pins end-to-end."""
+    path, rem, bw, act = _net_rerate_case(seed, slots, links, levels)
+    rate_ref, eta_ref = net_rerate_ref(path, rem, bw, act, now=321.5)
+    rate_k, eta_k = net_rerate(path, rem, bw, act, 321.5, backend="interpret")
+    assert np.array_equal(rate_k, rate_ref)
+    assert eta_k == eta_ref
+
+
+def test_net_rerate_auto_backend_on_cpu_is_exact():
+    """backend='auto' off-TPU routes to the float64 oracle — the fast path
+    the net='pallas' engine uses per event on this container."""
+    path, rem, bw, act = _net_rerate_case(7, 64, 30, 3)
+    rate_ref, eta_ref = net_rerate_ref(path, rem, bw, act, 0.0)
+    rate_a, eta_a = net_rerate(path, rem, bw, act, 0.0, backend="auto")
+    assert np.array_equal(rate_a, rate_ref)
+    assert eta_a == eta_ref
+
+
+def test_net_rerate_empty_and_padding_rows():
+    rate, eta = net_rerate_ref(np.zeros((0, 3), int), np.zeros(0),
+                               np.ones(4), np.zeros(4), 5.0)
+    assert rate.shape == (0,) and eta == float("inf")
+    # an all-padding row gets rate 0 and never drives the eta scan
+    path = np.array([[0, -1], [-1, -1]])
+    rate, eta = net_rerate_ref(path, np.array([10.0, 10.0]),
+                               np.array([2.0]), np.array([1.0]), 1.0)
+    assert rate[1] == 0.0
+    assert eta == pytest.approx(1.0 + 10.0 / 2.0)
+
+
+def test_net_rerate_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="backend"):
+        net_rerate(np.zeros((1, 1), int), np.ones(1), np.ones(1),
+                   np.ones(1), 0.0, backend="cuda")
 
 
 def test_selective_scan_streaming_equivalence():

@@ -1,0 +1,257 @@
+"""Path-contention NetworkEngine: uplink-path topology queries on deep
+trees, the hand-computed min-over-path contention fixture, backend
+equivalence (numpy vs pallas), and the legacy topmost-model divergence."""
+
+import dataclasses
+import types
+
+import pytest
+
+from repro.core import GridConfig, GridTopology, NetworkEngine, run_experiment
+from repro.core.network import BACKENDS
+
+GB = 1e9
+
+
+def _topo(fanouts, uplinks, lan=100.0, path_model="full"):
+    return GridTopology(0, 0, lan_bandwidth=lan, wan_bandwidth=uplinks[0],
+                        storage_capacity=10 * GB, tier_fanouts=fanouts,
+                        uplink_bandwidths=uplinks, path_model=path_model)
+
+
+# -- uplink_index / uplink_path / links_for on deep trees -------------------
+class TestUplinkPath4Tier:
+    """(2, 4, 7): 2 clusters x 4 groups x 7 sites. wan_links layout:
+    level-1 cluster uplinks are ids 0-1, level-2 group uplinks ids 2-9."""
+
+    def setup_method(self):
+        self.topo = _topo((2, 4, 7), (10.0, 100.0))
+
+    def test_same_group(self):
+        assert self.topo.uplink_path(0, 3) == ()
+        assert self.topo.uplink_index(0, 3) == -1
+        assert [l.name for l in self.topo.links_for(0, 3)] == ["nic0"]
+        assert self.topo.link_ids_for(0, 3) == (0,)
+
+    def test_sibling_subtree(self):
+        # site 0 (group 0) -> site 7 (group 1), same cluster: one crossed
+        # uplink, the source group's — full and topmost models agree
+        assert self.topo.uplink_path(0, 7) == (2,)
+        assert self.topo.uplink_index(0, 7) == 2
+        assert self.topo.link_ids_for(0, 7) == (0, 56 + 2)
+
+    def test_cross_region(self):
+        # site 0 -> site 28 (cluster 1): crosses the cluster-0 uplink AND
+        # the group-0 uplink below it, topmost first
+        assert self.topo.uplink_path(0, 28) == (0, 2)
+        assert self.topo.uplink_index(0, 28) == 0          # topmost only
+        assert self.topo.link_ids_for(0, 28) == (0, 56 + 0, 56 + 2)
+        # reverse direction uses the *source-side* (cluster 1) links
+        assert self.topo.uplink_path(28, 0) == (1, 2 + 4)
+
+    def test_topmost_model_truncates(self):
+        legacy = _topo((2, 4, 7), (10.0, 100.0), path_model="topmost")
+        assert legacy.uplink_path(0, 28) == (0,)
+        assert legacy.uplink_path(0, 7) == (2,)            # unchanged
+        assert legacy.link_ids_for(0, 28) == (0, 56 + 0)
+
+
+class TestUplinkPath5Tier:
+    """(2, 3, 3, 3): 54 sites; wan_links: level-1 ids 0-1, level-2 ids 2-7,
+    level-3 ids 8-25."""
+
+    def setup_method(self):
+        self.topo = _topo((2, 3, 3, 3), (10.0, 50.0, 200.0))
+
+    def test_same_site_group(self):
+        assert self.topo.uplink_path(0, 2) == ()
+        assert self.topo.link_ids_for(0, 2) == (0,)
+
+    def test_sibling_subtree_mid(self):
+        # site 0 -> site 4: same level-2 node, different leaf groups
+        assert self.topo.ancestors(0) == (0, 0, 0)
+        assert self.topo.ancestors(4) == (0, 0, 1)
+        assert self.topo.uplink_path(0, 4) == (8,)
+        assert self.topo.uplink_index(0, 4) == 8
+
+    def test_cross_region_full_depth(self):
+        # site 0 -> site 53: diverges at the root, crosses all three
+        # source-side uplinks top-down
+        assert self.topo.ancestors(53) == (1, 5, 17)
+        assert self.topo.uplink_path(0, 53) == (0, 2, 8)
+        assert self.topo.uplink_index(0, 53) == 0
+        assert self.topo.link_ids_for(0, 53) == (0, 54, 54 + 2, 54 + 8)
+
+    def test_point_bandwidth_sees_thin_mid_tier(self):
+        # make the lower tier the bottleneck: 100 over 1 top-down
+        topo = _topo((2, 2, 2), (100.0, 1.0))
+        # site 0 -> site 7 crosses level-1 (100) and a thin level-2 (1)
+        assert topo.point_bandwidth(0, 7) == 1.0
+        legacy = _topo((2, 2, 2), (100.0, 1.0), path_model="topmost")
+        assert legacy.point_bandwidth(0, 7) == pytest.approx(100.0)
+
+
+def test_path_model_validation():
+    with pytest.raises(ValueError, match="path_model"):
+        _topo((2, 2), (10.0,), path_model="bogus")
+
+
+# -- the 3-transfer mid-tier contention fixture -----------------------------
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+def test_three_transfer_min_over_path(backend):
+    """Hand-computed fair shares on a (2,2,2) tree: NIC 100 B/s, cluster
+    uplinks 50, group uplinks 10 (ids: cluster c -> 8+c, group g -> 8+2+g).
+
+      t1: 0 -> 6  crosses nic0, cluster-0 (50), group-0 (10)
+      t2: 1 -> 2  crosses nic1, group-0 (10)
+      t3: 0 -> 1  crosses nic0 only
+
+    Occupancy: nic0={t1,t3}, nic1={t2}, cluster0={t1}, group0={t1,t2}, so
+      t1 = min(100/2, 50/1, 10/2) = 5      (mid-tier bound through-traffic)
+      t2 = min(100/1, 10/2)       = 5
+      t3 = 100/2                  = 50
+    The legacy topmost model would rate t1 = min(100/2, 50/1) = 50."""
+    topo = _topo((2, 2, 2), (50.0, 10.0))
+    net = NetworkEngine(topo, backend=backend)
+    slots = {}
+    for name, (src, dst) in {"t1": (0, 6), "t2": (1, 2), "t3": (0, 1)}.items():
+        tr = types.SimpleNamespace(slot=-1)
+        net.alloc(tr, 1e6, topo.link_ids_for(src, dst))
+        net.rerate(topo.link_ids_for(src, dst), 0.0)
+        slots[name] = tr.slot
+    assert net.rate[slots["t1"]] == pytest.approx(5.0)
+    assert net.rate[slots["t2"]] == pytest.approx(5.0)
+    assert net.rate[slots["t3"]] == pytest.approx(50.0)
+    # eta scan: smallest rem/rate wins
+    assert net.rerate((), 0.0) == pytest.approx(1e6 / 50.0)
+
+    legacy = _topo((2, 2, 2), (50.0, 10.0), path_model="topmost")
+    lnet = NetworkEngine(legacy, backend=backend)
+    tr = types.SimpleNamespace(slot=-1)
+    lnet.alloc(tr, 1e6, legacy.link_ids_for(0, 6))
+    lnet.rerate(legacy.link_ids_for(0, 6), 0.0)
+    assert lnet.rate[tr.slot] == pytest.approx(50.0)
+
+
+def test_engine_release_and_regrow():
+    topo = _topo((2, 2), (10.0,))
+    net = NetworkEngine(topo)
+    trs = []
+    for i in range(100):           # force a capacity doubling past 64
+        tr = types.SimpleNamespace(slot=-1)
+        net.alloc(tr, 1e6, topo.link_ids_for(0, 3))
+        trs.append(tr)
+    assert net.cap >= 128 and net.n_active == 100
+    assert net.link_act[0] == 100.0
+    changed = net.release(trs[0])
+    assert changed == topo.link_ids_for(0, 3)
+    assert net.n_active == 99 and net.link_act[0] == 99.0
+    assert trs[0].slot == -1
+
+
+def test_unknown_backend_rejected():
+    topo = _topo((2, 2), (10.0,))
+    with pytest.raises(ValueError, match="backend"):
+        NetworkEngine(topo, backend="fortran")
+    with pytest.raises(ValueError, match="net engine"):
+        run_experiment(GridConfig(n_regions=2, sites_per_region=2), n_jobs=1,
+                       net="fortran")
+    assert "numpy" in BACKENDS and "pallas" in BACKENDS
+
+
+def test_topmost_refuses_full_path_topology():
+    """net='topmost' must not silently mutate a topology built with the
+    full path model — a direct GridSimulator gets a loud error instead."""
+    from repro.core import GridSimulator, build_catalog, build_topology
+    cfg = GridConfig(n_regions=2, sites_per_region=2)
+    topo = build_topology(cfg)                      # path_model="full"
+    cat = build_catalog(cfg, topo)
+    with pytest.raises(ValueError, match="path_model='topmost'"):
+        GridSimulator(topo, cat, net="topmost")
+    assert topo.path_model == "full"                # untouched
+    legacy = build_topology(cfg, path_model="topmost")
+    GridSimulator(legacy, build_catalog(cfg, legacy), net="topmost")
+
+
+# -- backend equivalence and fidelity divergence ----------------------------
+def test_two_level_backends_bit_identical():
+    """On two-level grids all engine flags (numpy / pallas / topmost) must
+    produce the same floats — the path is {NIC, region uplink} under every
+    model."""
+    cfg = GridConfig(n_regions=2, sites_per_region=4)
+    base = run_experiment(cfg, strategy="hrs", n_jobs=60, net="numpy")
+    for net in ("pallas", "topmost"):
+        r = run_experiment(cfg, strategy="hrs", n_jobs=60, net=net)
+        assert r.avg_job_time == base.avg_job_time, net
+        assert r.avg_inter_comms == base.avg_inter_comms, net
+        assert r.total_wan_gb == base.total_wan_gb, net
+        assert r.makespan == base.makespan, net
+
+
+def test_deep_tree_backends_bit_identical():
+    """numpy incremental vs pallas full-recompute agree bit-for-bit on a
+    deep tree too (same pure function of link occupancy)."""
+    mbps = 1e6 / 8
+    cfg = GridConfig(tier_fanouts=(3, 3, 6),
+                     uplink_bandwidths=(100 * mbps, 10 * mbps))
+    a = run_experiment(cfg, strategy="hrs", n_jobs=60, net="numpy")
+    b = run_experiment(cfg, strategy="hrs", n_jobs=60, net="pallas")
+    assert a.avg_job_time == b.avg_job_time
+    assert a.avg_inter_comms == b.avg_inter_comms
+    assert a.makespan == b.makespan
+
+
+def test_deep_tree_full_path_diverges_from_topmost():
+    """The fidelity change is real: on a fat-top/thin-mid tree the
+    per-link path model must not reproduce the legacy topmost numbers."""
+    mbps = 1e6 / 8
+    cfg = GridConfig(tier_fanouts=(3, 3, 6),
+                     uplink_bandwidths=(100 * mbps, 10 * mbps))
+    full = run_experiment(cfg, strategy="hrs", n_jobs=60, net="numpy")
+    legacy = run_experiment(cfg, strategy="hrs", n_jobs=60, net="topmost")
+    assert full.avg_job_time != legacy.avg_job_time
+
+
+# -- the vectorized shortest-transfer broker --------------------------------
+def test_jax_shortest_transfer_matches_python():
+    """Batch decisions over a frozen snapshot must equal the sequential
+    python policy site-for-site (durable masters + zero-bw guard incl.)."""
+    from repro.core import (GridSimulator, build_catalog, build_topology,
+                            generate_jobs)
+    from repro.core.scheduler import make_scheduler
+    cfg = GridConfig(n_regions=3, sites_per_region=5)
+    topo = build_topology(cfg)
+    cat = build_catalog(cfg, topo)
+    sim = GridSimulator(topo, cat, scheduler="shortesttransfer",
+                        strategy="hrs", broker="jax")
+    for info in cat.files.values():
+        sim.storage.bootstrap(info.master_site, info.lfn)
+    jobs = generate_jobs(cfg, 48)
+    want = [make_scheduler("shortesttransfer", cat, topo).select_site(j)
+            for j in jobs]
+    got = sim._jax_broker.select_batch([j.required for j in jobs])
+    assert got == want
+
+
+def test_jax_shortest_transfer_broker_end_to_end():
+    cfg = GridConfig(n_regions=2, sites_per_region=4)
+    a = run_experiment(cfg, scheduler="shortesttransfer", strategy="hrs",
+                       n_jobs=60, broker="jax", arrival_burst=10)
+    b = run_experiment(cfg, scheduler="shortesttransfer", strategy="hrs",
+                       n_jobs=60, broker="jax", arrival_burst=10)
+    assert a.completed_jobs == a.n_jobs == 60
+    assert a.avg_job_time == b.avg_job_time       # deterministic
+
+
+def test_jax_broker_still_rejects_unsupported_policies():
+    with pytest.raises(ValueError, match="broker='jax'"):
+        run_experiment(GridConfig(n_regions=2, sites_per_region=2),
+                       scheduler="leastloaded", n_jobs=1, broker="jax")
+
+
+def test_bulk_shortest_scenario_smoke():
+    from repro.core import SCENARIOS
+    from repro.launch.experiments import run_spec
+    spec = dataclasses.replace(SCENARIOS["bulk_shortest"])
+    r = run_spec(spec, n_jobs=50)
+    assert r.completed_jobs == 50
