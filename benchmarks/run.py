@@ -228,6 +228,46 @@ def scale_sweep() -> None:
          f"10k_completed={biggest['completed_jobs']}")
 
 
+def strategy_sweep(n_jobs: int = 10000) -> None:
+    """Replication-strategy matrix: the reactive paper strategies
+    {hrs, bhr, lru} vs the access-history-driven pair {economic,
+    predictive} on the two discriminating regimes — ``cache_starved``
+    (eviction pressure) and ``hotset_drift`` (the popular file set shifts
+    mid-run). Multi-seed; writes ``results/BENCH_strategies.json``."""
+    from repro.core import SCENARIOS
+    from repro.launch.experiments import run_scenario
+    strategies = ("hrs", "bhr", "lru", "economic", "predictive")
+    seeds = (0, 1)
+    rows = []
+    t0 = time.perf_counter()
+    for scen in ("cache_starved", "hotset_drift"):
+        base = SCENARIOS[scen]
+        for strat in strategies:
+            spec = dataclasses.replace(base, strategy=strat)
+            for row in run_scenario(spec, n_jobs=n_jobs, seeds=seeds):
+                rows.append({"scenario": scen, "strategy": strat, **row})
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "BENCH_strategies.json"), "w") as f:
+        json.dump({"n_jobs": n_jobs, "seeds": list(seeds),
+                   "strategies": list(strategies), "rows": rows}, f, indent=1)
+
+    def mean_ajt(scen: str, strat: str) -> float:
+        sel = [r["avg_job_time_s"] for r in rows
+               if r["scenario"] == scen and r["strategy"] == strat]
+        return sum(sel) / len(sel)
+
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    hrs_d, pred_d = mean_ajt("hotset_drift", "hrs"), mean_ajt("hotset_drift",
+                                                              "predictive")
+    hrs_s, econ_s = mean_ajt("cache_starved", "hrs"), mean_ajt("cache_starved",
+                                                               "economic")
+    _row("strategy_sweep", us,
+         f"drift_hrs={hrs_d:.0f}s;drift_predictive={pred_d:.0f}s;"
+         f"predictive_gain={100 * (hrs_d - pred_d) / hrs_d:+.1f}%;"
+         f"starved_hrs={hrs_s:.0f}s;starved_economic={econ_s:.0f}s;"
+         f"economic_gain={100 * (hrs_s - econ_s) / hrs_s:+.1f}%")
+
+
 def net_sweep(n_jobs: int = 10000) -> None:
     """Network-engine sweep: (a) fidelity — deep-tree scenarios under the
     legacy topmost-uplink model vs the per-link path model; (b) performance
@@ -340,6 +380,10 @@ BENCHES = {
                  "fault-tolerance run: failures + speculative backups"),
     "scale_sweep": (scale_sweep,
                     "2k/5k/10k-job engine scale sweep -> BENCH_scale.json"),
+    "strategy_sweep": (strategy_sweep,
+                       "reactive vs economic/predictive strategy matrix on "
+                       "cache_starved + hotset_drift -> "
+                       "BENCH_strategies.json"),
     "net_sweep": (net_sweep,
                   "network-engine sweep: topmost-vs-path fidelity + "
                   "numpy-vs-pallas re-rate perf -> BENCH_net.json"),
@@ -361,11 +405,18 @@ def main(argv=None) -> None:
     ap.add_argument("--net-jobs", type=int, default=10000,
                     help="job count for the net_sweep scale point "
                          "(default 10000)")
+    ap.add_argument("--strategy-jobs", type=int, default=10000,
+                    help="job count per strategy_sweep cell (default 10000)")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     for name in args.bench or BENCHES:
         fn = BENCHES[name][0]
-        fn(args.net_jobs) if name == "net_sweep" else fn()
+        if name == "net_sweep":
+            fn(args.net_jobs)
+        elif name == "strategy_sweep":
+            fn(args.strategy_jobs)
+        else:
+            fn()
 
 
 if __name__ == "__main__":

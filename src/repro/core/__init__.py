@@ -2,12 +2,17 @@
 HRS replication, plus the discrete-event engine that evaluates them and the
 jit-compiled dispatch path used by the training/serving runtime."""
 
+from .access import AccessHistory
 from .catalog import FileInfo, ReplicaCatalog
+from .economy import (ECON_BACKENDS, EconomicValue, FileValue,
+                      PopularityValue, ProposedReplication,
+                      ReplicationOptimizer, VALUE_MODELS)
 from .metrics import ExperimentResult, run_experiment
 from .network import NetworkEngine
-from .scenarios import (ChurnSpec, SCENARIOS, ScenarioSpec, arrival_schedule,
-                        get_scenario, injections, register_scenario,
-                        to_grid_config)
+from .scenarios import (ChurnSpec, SCENARIOS, SWEEPS, ScenarioSpec,
+                        SweepSpec, arrival_schedule, get_scenario, get_sweep,
+                        injections, register_scenario, register_sweep,
+                        to_grid_config, with_axis)
 from .replica import (BHRStrategy, FetchPlan, HRSSinglePhaseStrategy,
                       HRSStrategy, LRUStrategy, NoReplicationStrategy,
                       ReplicaStrategy, StorageState, STRATEGIES,
@@ -21,10 +26,14 @@ from .workload import (GB, MB, GridConfig, build_catalog, build_topology,
                        generate_jobs, job_type_filesets)
 
 __all__ = [
+    "AccessHistory",
     "FileInfo", "ReplicaCatalog", "ExperimentResult", "run_experiment",
+    "ECON_BACKENDS", "EconomicValue", "FileValue", "PopularityValue",
+    "ProposedReplication", "ReplicationOptimizer", "VALUE_MODELS",
     "NetworkEngine",
-    "ChurnSpec", "SCENARIOS", "ScenarioSpec", "arrival_schedule",
-    "get_scenario", "injections", "register_scenario", "to_grid_config",
+    "ChurnSpec", "SCENARIOS", "SWEEPS", "ScenarioSpec", "SweepSpec",
+    "arrival_schedule", "get_scenario", "get_sweep", "injections",
+    "register_scenario", "register_sweep", "to_grid_config", "with_axis",
     "BHRStrategy", "FetchPlan", "HRSSinglePhaseStrategy", "HRSStrategy",
     "LRUStrategy",
     "NoReplicationStrategy", "ReplicaStrategy", "StorageState", "STRATEGIES",

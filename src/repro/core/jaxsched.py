@@ -117,6 +117,56 @@ class JaxScheduler:
 
 
 @jax.jit
+def leastloaded_select(load, capacity, online):
+    """LeastLoaded as one fused computation: argmin of relative load over
+    online sites. ``jnp.argmin`` returns the first (lowest-id) minimum,
+    matching the sequential policy's ``(relative_load, site_id)`` key."""
+    rel = jnp.where(online, load / capacity, jnp.inf)
+    return jnp.argmin(rel)
+
+
+class JaxLeastLoadedBroker(JaxScheduler):
+    """Vectorized ``leastloaded`` dispatch.
+
+    Snapshot semantics match the other jax brokers: every job in a batch
+    sees the same load vector (queued work is not updated between batch
+    members), so the whole batch lands on the argmin site — bulk placement
+    trades spreading for one fused decision, exactly like the dataaware
+    batch broker's shared-snapshot argmax.
+    """
+
+    def select_batch(self, required_sets: list[list[str]]) -> list[int]:
+        load, cap, online = self.site_state_np()
+        site = int(leastloaded_select(jnp.asarray(load), jnp.asarray(cap),
+                                      jnp.asarray(online)))
+        return [site] * len(required_sets)
+
+
+class JaxRandomBroker(JaxScheduler):
+    """Vectorized ``random`` dispatch: a host-PRNG index vector gathered
+    over the online-site vector on device.
+
+    Site-for-site identical to the sequential :class:`repro.core.scheduler.
+    RandomScheduler`: ``rng.choice(seq)`` consumes exactly one
+    ``_randbelow(len(seq))`` draw, and so does ``rng.randrange(n)`` here —
+    share (or equally seed) the policy's ``Random`` and the decision
+    streams coincide.
+    """
+
+    def __init__(self, catalog: ReplicaCatalog, topology: GridTopology,
+                 rng) -> None:
+        super().__init__(catalog, topology)
+        self.rng = rng
+
+    def select_batch(self, required_sets: list[list[str]]) -> list[int]:
+        _, _, online = self.site_state_np()
+        ids = np.flatnonzero(online)
+        idx = np.array([self.rng.randrange(len(ids))
+                        for _ in required_sets], np.intp)
+        return [int(s) for s in jnp.take(jnp.asarray(ids), jnp.asarray(idx))]
+
+
+@jax.jit
 def st_costs_batch(path, valid, link_bw, link_act, presence, fetch_mask,
                    sizes, required, rel, online):
     """ShortestTransfer (Chang et al. [6]) as one fused computation.

@@ -36,6 +36,8 @@ def run_experiment(
     arrival_burst: int = 1,
     arrival_times: Sequence[float] | None = None,
     net: str = "numpy",
+    econ: str = "numpy",
+    econ_interval: float | None = None,
 ) -> ExperimentResult:
     """One full simulation run (the unit behind every paper figure).
 
@@ -61,13 +63,21 @@ def run_experiment(
     ``"pallas"`` the vectorized/kernel full re-rate, ``"topmost"`` the
     legacy single-uplink accounting (fidelity baseline). Identical results
     on two-level grids under all of them.
+
+    ``econ`` picks the value-scoring backend of the replication economy
+    (:data:`repro.core.economy.ECON_BACKENDS`, mirroring ``net``) and
+    ``econ_interval`` its period in sim seconds — ``None`` arms the
+    periodic optimizer only for the access-aware strategies
+    (``economic`` / ``predictive``), an explicit value > 0 forces it on
+    for any strategy, 0 disables it outright.
     """
     topology = build_topology(
         cfg, path_model="topmost" if net == "topmost" else "full")
     catalog = build_catalog(cfg, topology)
     sim = GridSimulator(topology, catalog, scheduler=scheduler, strategy=strategy,
                         seed=cfg.seed, speculative_backups=speculative_backups,
-                        broker=broker, batch_window=batch_window, net=net)
+                        broker=broker, batch_window=batch_window, net=net,
+                        econ=econ, econ_interval=econ_interval)
     for info in catalog.files.values():
         sim.storage.bootstrap(info.master_site, info.lfn)
     jobs = generate_jobs(cfg, n_jobs)

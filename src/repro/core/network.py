@@ -93,6 +93,7 @@ class NetworkEngine:
         self._free = list(range(self.cap - 1, -1, -1))
         self.n_active = 0
         self.last = 0.0                        # last advance() timestamp
+        self._pair_paths: Optional[np.ndarray] = None   # lazy (S, S, depth)
 
     # -- slot lifecycle ----------------------------------------------------
     def alloc(self, tr, size: float, links: tuple[int, ...]) -> int:
@@ -142,6 +143,43 @@ class NetworkEngine:
         self._free.append(slot)
         tr.slot = -1
         return links
+
+    # -- bandwidth queries -------------------------------------------------
+    def point_bandwidth(self, src: int, dst: int) -> float:
+        """Available bandwidth if one more transfer joined ``src -> dst``,
+        computed from the engine's own link arrays. The counts mirror the
+        topology ``Link`` objects exactly (both are updated in
+        ``alloc``/``release``), so this equals
+        :meth:`GridTopology.point_bandwidth` bit-for-bit; it exists so the
+        replication economy prices transfers against the same state the
+        fluid model drains."""
+        ids = self.topology.link_ids_for(src, dst)
+        bw = np.inf
+        for li in ids:
+            share = self.link_bw[li] / (self.link_act[li] + 1.0)
+            if share < bw:
+                bw = share
+        return float(bw)
+
+    def point_bandwidth_matrix(self) -> np.ndarray:
+        """``B[h, s]`` = :meth:`point_bandwidth` for every (source, dst)
+        pair, as one vectorized gather-min over a cached static
+        ``(sites, sites, depth)`` link-id tensor (the same tensor shape
+        the jitted shortest-transfer broker snapshots). The diagonal is
+        the source NIC share (no uplinks crossed); economy consumers mask
+        self-supply themselves."""
+        if self._pair_paths is None:
+            n = self.topology.n_sites
+            paths = np.full((n, n, self.max_links), -1, np.intp)
+            for h in range(n):
+                for s in range(n):
+                    ids = self.topology.link_ids_for(h, s)
+                    paths[h, s, : len(ids)] = ids
+            self._pair_paths = paths
+        share = self.link_bw / (self.link_act + 1.0)
+        p = self._pair_paths
+        valid = p >= 0
+        return np.where(valid, share[np.maximum(p, 0)], np.inf).min(axis=-1)
 
     # -- fluid model -------------------------------------------------------
     def advance(self, now: float) -> None:

@@ -16,6 +16,8 @@ import dataclasses
 import itertools
 from typing import Iterable, Optional
 
+import numpy as np
+
 from .catalog import ReplicaCatalog
 from .topology import GridTopology
 
@@ -165,15 +167,26 @@ def _best_bandwidth_source(
 
 
 class ReplicaStrategy:
-    """Base interface. Subclasses implement ``plan_fetch``."""
+    """Base interface. Subclasses implement ``plan_fetch``.
+
+    ``access`` is the shared :class:`repro.core.access.AccessHistory` the
+    simulator feeds from its fetch/hit path; it is ``None`` for the
+    history-blind paper strategies and required by the access-aware ones
+    (``economic`` / ``predictive``, which also set ``uses_economy`` so
+    the simulator arms the periodic :class:`repro.core.economy.
+    ReplicationOptimizer`).
+    """
 
     name = "base"
+    uses_economy = False         # arm the proactive ReplicationOptimizer?
+    econ_model = "economic"      # VALUE_MODELS entry the optimizer scores with
 
     def __init__(self, catalog: ReplicaCatalog, topology: GridTopology,
-                 storage: StorageState) -> None:
+                 storage: StorageState, access=None) -> None:
         self.catalog = catalog
         self.topology = topology
         self.storage = storage
+        self.access = access
 
     def _online_holders(self, lfn: str) -> list[int]:
         """Holders we may fetch from (see ReplicaCatalog.fetchable_holders)."""
@@ -335,6 +348,159 @@ class LRUStrategy(ReplicaStrategy):
                          inter_region=inter)
 
 
+class _AccessAwareStrategy(ReplicaStrategy):
+    """Shared machinery for the history-driven strategies: guaranteed
+    non-None ``access`` plus source selection and eviction ordering that
+    consult it."""
+
+    uses_economy = True
+
+    def __init__(self, catalog: ReplicaCatalog, topology: GridTopology,
+                 storage: StorageState, access=None) -> None:
+        if access is None:
+            from .access import AccessHistory   # deferred: avoid cycle cost
+            access = AccessHistory(catalog, topology)
+        super().__init__(catalog, topology, storage, access)
+
+    def _select_source(self, candidates: list[int], dst: int) -> int:
+        """Max effective bandwidth, discounted by how busy a candidate has
+        recently been *serving* transfers (AccessHistory's decayed serve
+        counts) — equally-fast replicas rotate instead of dog-piling one
+        source. Ties break toward the lowest site id."""
+        def key(h: int) -> tuple[float, int]:
+            bw = self.topology.point_bandwidth(h, dst)
+            return (bw / (1.0 + self.access.serve_load(h)), -h)
+        return max(candidates, key=key)
+
+    def _plan_trade(self, lfn: str, src: int, dst: int, inter: bool,
+                    size: float, value_in: float,
+                    retention) -> FetchPlan:
+        """The shared eviction trade: evict cheapest-retention-value
+        first, but only while the incoming file's value stays strictly
+        ahead of the total evicted; a losing (or unfillable) trade
+        streams through the temporary buffer instead. ``retention`` maps
+        the evictable resident list to its per-file retention values —
+        the only thing the two access-aware strategies disagree on."""
+        resident = [f for f in self.storage.lru_order(dst)
+                    if self.storage.evictable(dst, f)]
+        values = np.asarray(retention(resident), float)
+        freed = self.storage.free(dst)
+        evictions: list[str] = []
+        value_out = 0.0
+        for i in np.argsort(values, kind="stable"):
+            if freed >= size:
+                break
+            value_out += float(values[int(i)])
+            if value_out >= value_in:
+                break                        # the trade went net-negative
+            evictions.append(resident[int(i)])
+            freed += self.catalog.size(resident[int(i)])
+        if freed >= size and value_out < value_in:
+            return FetchPlan(lfn, src, dst, store=True, evictions=evictions,
+                             inter_region=inter)
+        return FetchPlan(lfn, src, dst, store=False, evictions=[],
+                         inter_region=inter)
+
+    def _refetch_cost(self, lfn: str, site: int) -> float:
+        """Seconds to re-stage ``lfn`` at ``site`` from its best *other*
+        holder; infinite when no other copy exists (losing the last
+        non-master copy is priced as unaffordable)."""
+        holders = [h for h in
+                   self.catalog.fetchable_holders(lfn, self.topology)
+                   if h != site]
+        if not holders:
+            return float("inf")
+        bw = max(self.topology.point_bandwidth(h, site) for h in holders)
+        if bw <= 0.0:
+            return float("inf")
+        return self.catalog.size(lfn) / bw
+
+
+class PredictiveStrategy(_AccessAwareStrategy):
+    """Popularity-prediction replication (CMS access-pattern study line).
+
+    Stores a fetched file only when its predicted future accesses (the
+    decayed count — the access that triggered this fetch is already in it)
+    beat the summed prediction of everything that must be evicted to make
+    room; a losing trade streams through the temporary buffer instead,
+    keeping the cache full of files the history says will be read again.
+    Retention is hierarchy-aware in the HRS spirit: a sole-in-region copy
+    counts double (its re-fetch would cross the WAN). Sources are picked
+    region-local first, by effective bandwidth discounted for recent
+    serving load. Enables the periodic optimizer under the ``popularity``
+    value model, so rising files are staged ahead of demand — the
+    drifting-hot-set regime (``hotset_drift``) is where this beats
+    reactive HRS.
+    """
+
+    name = "predictive"
+    econ_model = "popularity"
+    #: retention multiplier for sole-in-region copies (WAN re-fetch risk)
+    sole_copy_weight = 2.0
+
+    def _retention_scores(self, site: int,
+                          lfns: list[str]) -> np.ndarray:
+        scores = self.access.scores(site, lfns)
+        dup = np.array([self.catalog.duplicated_in_region(l, site,
+                                                          self.topology)
+                        for l in lfns], bool)
+        return np.where(dup, scores, self.sole_copy_weight * scores)
+
+    def plan_fetch(self, lfn: str, dst: int) -> FetchPlan:
+        holders = self._online_holders(lfn)
+        region = self.topology.region_of(dst)
+        local = [h for h in holders if self.topology.region_of(h) == region]
+        src = self._select_source(local or holders, dst)
+        inter = self.topology.is_inter_region(src, dst)
+        size = self.catalog.size(lfn)
+        if self.storage.free(dst) >= size:
+            return FetchPlan(lfn, src, dst, store=True, evictions=[],
+                             inter_region=inter)
+        # the trade: predicted accesses in vs predicted accesses evicted
+        score_in = float(self.access.scores(dst, [lfn])[0])
+        return self._plan_trade(
+            lfn, src, dst, inter, size, score_in,
+            lambda resident: self._retention_scores(dst, resident))
+
+
+class EconomicStrategy(_AccessAwareStrategy):
+    """OptorSim-style economic replication.
+
+    A replica is bought only when the trade clears: the incoming file's
+    value (predicted local accesses x the transfer cost each would pay
+    without it) must exceed the total retention value of everything
+    evicted to make room. Eviction scans cheapest-retention-value first;
+    a losing trade falls back to the temporary buffer (stream, don't
+    store). Enables the periodic optimizer under the ``economic`` value
+    model, which runs the same pricing proactively grid-wide.
+    """
+
+    name = "economic"
+    econ_model = "economic"
+
+    def _retention_value(self, lfn: str, site: int) -> float:
+        score = float(self.access.scores(site, [lfn])[0])
+        return score * self._refetch_cost(lfn, site)
+
+    def plan_fetch(self, lfn: str, dst: int) -> FetchPlan:
+        holders = self._online_holders(lfn)
+        src = self._select_source(holders, dst)
+        size = self.catalog.size(lfn)
+        inter = self.topology.is_inter_region(src, dst)
+        if self.storage.free(dst) >= size:
+            return FetchPlan(lfn, src, dst, store=True, evictions=[],
+                             inter_region=inter)
+        # value of owning the incoming file: predicted accesses x the
+        # cost of fetching it (what each future access would pay)
+        score_in = float(self.access.scores(dst, [lfn])[0])
+        bw = self.topology.point_bandwidth(src, dst)
+        value_in = score_in * (size / bw if bw > 0.0 else float("inf"))
+        return self._plan_trade(
+            lfn, src, dst, inter, size, value_in,
+            lambda resident: [self._retention_value(f, dst)
+                              for f in resident])
+
+
 class NoReplicationStrategy(ReplicaStrategy):
     """Always stream remotely, never store. Lower bound for replication."""
 
@@ -349,21 +515,27 @@ class NoReplicationStrategy(ReplicaStrategy):
 
 #: Replication-strategy registry, keyed by each strategy's ``name``
 #: attribute: ``hrs`` (the paper's contribution), ``hrs_singlephase``
-#: (eviction ablation), ``bhr``, ``lru``, ``noreplication``. These names are
-#: what ``GridSimulator``, ``run_experiment`` and ``ScenarioSpec.strategy``
-#: accept.
+#: (eviction ablation), ``bhr``, ``lru``, ``noreplication``, plus the
+#: access-history-driven pair ``economic`` (OptorSim-style valuation) and
+#: ``predictive`` (decayed-popularity prediction), which also arm the
+#: proactive replication economy. These names are what ``GridSimulator``,
+#: ``run_experiment`` and ``ScenarioSpec.strategy`` accept.
 STRATEGIES: dict[str, type[ReplicaStrategy]] = {
     c.name: c for c in (HRSStrategy, HRSSinglePhaseStrategy, BHRStrategy,
-                        LRUStrategy, NoReplicationStrategy)
+                        LRUStrategy, NoReplicationStrategy,
+                        EconomicStrategy, PredictiveStrategy)
 }
 
 
 def make_strategy(name: str, catalog: ReplicaCatalog, topology: GridTopology,
-                  storage: StorageState) -> ReplicaStrategy:
+                  storage: StorageState, access=None) -> ReplicaStrategy:
     """Instantiate a replication strategy from :data:`STRATEGIES` by name.
 
     Strategies are pure decision functions over the shared ``catalog`` /
     ``topology`` / ``storage`` state — the simulator executes the
-    :class:`FetchPlan` they return. Raises ``KeyError`` for unknown names.
+    :class:`FetchPlan` they return. ``access`` is the shared
+    :class:`repro.core.access.AccessHistory` (the access-aware strategies
+    build a private empty one when omitted, e.g. in unit tests). Raises
+    ``KeyError`` for unknown names.
     """
-    return STRATEGIES[name](catalog, topology, storage)
+    return STRATEGIES[name](catalog, topology, storage, access)

@@ -22,6 +22,7 @@ import dataclasses
 import math
 import random as _random
 
+from .economy import ECON_BACKENDS
 from .replica import STRATEGIES
 from .scheduler import SCHEDULERS
 from .simulator import NETS
@@ -62,7 +63,9 @@ class ScenarioSpec:
     SE-capacity multipliers, and ``storage_gb`` the base SE size.
 
     *Workload* — catalog size/granularity, per-job file count, job mix and
-    length, Zipf skew of the per-job file draw (``None`` = fixed sets).
+    length, Zipf skew of the per-job file draw (``None`` = fixed sets);
+    ``hotset_shifts`` reshuffles the popular file set that many times
+    mid-run (the drifting-hot-set regime).
 
     *Arrivals* — ``arrival`` is one of ``uniform | poisson | flash_crowd |
     diurnal`` (see :func:`arrival_schedule`); ``arrival_burst`` > 1 submits
@@ -76,8 +79,11 @@ class ScenarioSpec:
     *Engine* — scheduler / replication strategy / broker registry names,
     the network-engine backend ``net`` (``numpy`` | ``pallas`` |
     ``pallas-interpret`` | ``topmost``, see
-    :class:`repro.core.network.NetworkEngine`) and the seeds to run (one
-    simulation per seed).
+    :class:`repro.core.network.NetworkEngine`), the replication-economy
+    value-scoring backend ``econ`` + its period ``econ_interval_s``
+    (``None`` arms the optimizer only for the access-aware strategies; see
+    :mod:`repro.core.economy`) and the seeds to run (one simulation per
+    seed).
 
     Specs are frozen; derive variants with ``dataclasses.replace`` and
     serialize with :meth:`to_dict` / :meth:`from_dict` (exact round-trip,
@@ -102,6 +108,7 @@ class ScenarioSpec:
     catalog_gb: float = 50.0
     job_length: float = 60e9
     zipf_alpha: float | None = 0.9
+    hotset_shifts: int = 0           # mid-run hot-set reshuffles (drift)
     # -- arrival process ---------------------------------------------------
     arrival: str = "uniform"
     interarrival_s: float = 60.0
@@ -120,6 +127,8 @@ class ScenarioSpec:
     broker: str = "event"
     batch_window_s: float = 0.0
     net: str = "numpy"
+    econ: str = "numpy"              # value-scoring backend of the economy
+    econ_interval_s: float | None = None   # None=auto (access-aware strategies)
     seeds: tuple[int, ...] = (0,)
 
     def __post_init__(self) -> None:
@@ -146,6 +155,16 @@ class ScenarioSpec:
         if self.net not in NETS:
             raise ValueError(f"{self.name}: unknown net engine "
                              f"{self.net!r} (want one of {NETS})")
+        if self.econ not in ECON_BACKENDS:
+            raise ValueError(f"{self.name}: unknown econ backend "
+                             f"{self.econ!r} (want one of {ECON_BACKENDS})")
+        if self.hotset_shifts < 0:
+            raise ValueError(f"{self.name}: hotset_shifts must be >= 0")
+        if self.hotset_shifts > 0 and self.zipf_alpha is None:
+            raise ValueError(
+                f"{self.name}: hotset_shifts needs a Zipf workload "
+                "(zipf_alpha=None draws fixed per-type filesets, which "
+                "cannot drift)")
         if not self.seeds:
             raise ValueError(f"{self.name}: need at least one seed")
 
@@ -205,6 +224,7 @@ def to_grid_config(spec: ScenarioSpec, seed: int | None = None) -> GridConfig:
         job_length=spec.job_length,
         interarrival=spec.interarrival_s,
         zipf_alpha=spec.zipf_alpha,
+        hotset_shifts=spec.hotset_shifts,
         seed=spec.seeds[0] if seed is None else seed,
         tier_fanouts=None if two_level else spec.tier_fanouts,
         uplink_bandwidths=(None if two_level
@@ -393,4 +413,178 @@ register_scenario(ScenarioSpec(
                 "the 12 files a job needs, so eviction policy dominates.",
     probes="eviction-pressure regime (two-phase vs plain LRU)",
     storage_gb=2.0,
+))
+
+register_scenario(ScenarioSpec(
+    name="economy_starved",
+    description="The cache_starved world under the OptorSim-style "
+                "replication economy: the economic strategy prices every "
+                "eviction as a trade (predicted accesses x transfer cost) "
+                "and a periodic optimizer auctions top-valued files to "
+                "sites with space.",
+    probes="replication economy (economic/auction-based related work); "
+           "proactive vs reactive replication under eviction pressure",
+    storage_gb=2.0,
+    strategy="economic",
+    seeds=(0, 1),
+))
+
+register_scenario(ScenarioSpec(
+    name="hotset_drift",
+    description="Paper grid whose popular file set reshuffles 3 times "
+                "mid-run (sharper 1.1 Zipf draw): reactive strategies "
+                "keep serving yesterday's hot set while the predictive "
+                "strategy's decayed counts track the drift and its "
+                "optimizer stages rising files ahead of demand.",
+    probes="popularity-prediction replication (CMS access-pattern study); "
+           "the regime where predictive beats reactive HRS",
+    zipf_alpha=1.1,
+    hotset_shifts=3,
+    seeds=(0, 1),
+))
+
+
+# --------------------------------------------------------------------------
+# parameter sweeps as first-class specs
+# --------------------------------------------------------------------------
+#: Axes a sweep may vary: any ScenarioSpec field (replaced literally via
+#: ``dataclasses.replace``) plus the derived ``wan_mbps`` axis (the topmost
+#: uplink bandwidth, i.e. ``uplink_mbps[0]``).
+_SPEC_FIELDS = frozenset(
+    f.name for f in dataclasses.fields(ScenarioSpec)) - {"name"}
+SWEEP_AXES = _SPEC_FIELDS | {"wan_mbps"}
+
+
+def with_axis(spec: ScenarioSpec, axis: str, value) -> ScenarioSpec:
+    """One sweep cell: ``spec`` with ``axis`` replaced by ``value``.
+
+    The replaced spec re-validates in ``__post_init__``, so sweeping an
+    engine axis (``strategy``, ``net``, ``scheduler``, ``econ``, ...) to a
+    bad value fails at expansion time, not mid-run.
+    """
+    if axis == "wan_mbps":
+        return dataclasses.replace(
+            spec, uplink_mbps=(float(value),) + spec.uplink_mbps[1:])
+    if axis not in _SPEC_FIELDS:
+        raise ValueError(f"unknown sweep axis {axis!r} "
+                         f"(want one of {sorted(SWEEP_AXES)})")
+    # JSON-sourced values (SweepSpec.from_dict) arrive as lists: coerce
+    # them the same way ScenarioSpec.from_dict does, so sweep cells stay
+    # hashable frozen specs
+    if axis in ("tier_fanouts", "uplink_mbps", "seeds"):
+        value = tuple(value)
+    elif axis in ("uplink_scale", "storage_scale", "slowdowns"):
+        value = tuple(tuple(row) for row in value)
+    return dataclasses.replace(spec, **{axis: value})
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """A named parameter study: one base scenario crossed along one axis.
+
+    ``base`` names a registered :class:`ScenarioSpec`; each cell is the
+    base with ``axis`` set to one of ``values`` (see :func:`with_axis` for
+    the axis vocabulary — every spec field plus ``wan_mbps``). The runner
+    (``python -m repro.launch.experiments --scenario NAME``) accepts sweep
+    names next to scenario names and writes the whole grid, one row per
+    (value, seed), into ``BENCH_scenarios.json``. JSON round-trippable like
+    :class:`ScenarioSpec`.
+    """
+
+    name: str
+    base: str
+    axis: str
+    values: tuple
+    description: str = ""
+
+    def __post_init__(self) -> None:
+        if self.axis not in SWEEP_AXES:
+            raise ValueError(f"{self.name}: unknown sweep axis "
+                             f"{self.axis!r} (want one of "
+                             f"{sorted(SWEEP_AXES)})")
+        if not self.values:
+            raise ValueError(f"{self.name}: need at least one value")
+
+    def expand(self) -> list[tuple[object, ScenarioSpec]]:
+        """``(value, cell spec)`` per value; cells are named
+        ``base@axis=value`` and fully validated."""
+        base = get_scenario(self.base)
+        return [
+            (v, dataclasses.replace(with_axis(base, self.axis, v),
+                                    name=f"{self.base}@{self.axis}={v}"))
+            for v in self.values
+        ]
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["values"] = list(self.values)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SweepSpec":
+        d = dict(d)
+        d["values"] = tuple(d["values"])
+        return cls(**d)
+
+
+#: Named-sweep registry (the grid analogue of :data:`SCENARIOS`).
+SWEEPS: dict[str, SweepSpec] = {}
+
+
+def register_sweep(spec: SweepSpec) -> SweepSpec:
+    """Add a sweep to :data:`SWEEPS` (name must be unused in both
+    registries, so ``--scenario`` can resolve either)."""
+    if spec.name in SWEEPS or spec.name in SCENARIOS:
+        raise ValueError(f"sweep {spec.name!r} already registered")
+    get_scenario(spec.base)          # fail fast on a bad base
+    spec.expand()                    # ... and on any invalid cell
+    SWEEPS[spec.name] = spec
+    return spec
+
+
+def get_sweep(name: str) -> SweepSpec:
+    try:
+        return SWEEPS[name]
+    except KeyError:
+        raise KeyError(f"unknown sweep {name!r}; registered: "
+                       f"{', '.join(sorted(SWEEPS))}") from None
+
+
+_ALL_STRATEGIES = ("hrs", "bhr", "lru", "economic", "predictive")
+
+register_sweep(SweepSpec(
+    name="starved_strategies",
+    base="cache_starved",
+    axis="strategy",
+    values=_ALL_STRATEGIES,
+    description="Every replication strategy under 2 GB eviction pressure: "
+                "the discriminating regime for the access-aware pair.",
+))
+
+register_sweep(SweepSpec(
+    name="drift_strategies",
+    base="hotset_drift",
+    axis="strategy",
+    values=_ALL_STRATEGIES,
+    description="Every replication strategy against a drifting hot set "
+                "(prediction should beat reactive HRS here).",
+))
+
+register_sweep(SweepSpec(
+    name="contended_nets",
+    base="deep_contended",
+    axis="net",
+    values=("topmost", "numpy", "pallas"),
+    description="Network-model fidelity grid: the legacy topmost-uplink "
+                "accounting vs the per-link path model vs the vectorized "
+                "re-rate backend on the mid-tier-contended tree.",
+))
+
+register_sweep(SweepSpec(
+    name="baseline_wan",
+    base="paper_baseline",
+    axis="wan_mbps",
+    values=(10.0, 50.0, 100.0, 500.0, 1000.0),
+    description="The paper's fig7 WAN-bandwidth axis as a first-class "
+                "sweep.",
 ))

@@ -50,7 +50,9 @@ import heapq
 import random as _random
 from typing import Optional
 
+from .access import AccessHistory
 from .catalog import ReplicaCatalog
+from .economy import DEFAULT_INTERVAL_S, ECON_BACKENDS, ReplicationOptimizer
 from .network import BACKENDS, NetworkEngine
 from .replica import FetchPlan, ReplicaStrategy, StorageState, make_strategy
 from .scheduler import Job, SchedulerPolicy, make_scheduler
@@ -61,7 +63,7 @@ from .topology import GridTopology
 # events
 # --------------------------------------------------------------------------
 (SUBMIT, NET, CPU_DONE, FAIL, RECOVER, SLOW_START, SLOW_END, WATCHDOG,
- FLUSH) = range(9)
+ FLUSH, ECON) = range(10)
 
 #: Values the ``net=`` engine flag accepts: NetworkEngine backends plus
 #: ``"topmost"``, which keeps the numpy backend over a topology built with
@@ -145,6 +147,8 @@ class GridSimulator:
         broker: str = "event",
         batch_window: float = 0.0,
         net: str = "numpy",
+        econ: str = "numpy",
+        econ_interval: Optional[float] = None,
     ) -> None:
         self.topology = topology
         self.catalog = catalog
@@ -153,10 +157,20 @@ class GridSimulator:
             scheduler if isinstance(scheduler, SchedulerPolicy)
             else make_scheduler(scheduler, catalog, topology, seed=seed)
         )
-        self.strategy = (
-            strategy if isinstance(strategy, ReplicaStrategy)
-            else make_strategy(strategy, catalog, topology, self.storage)
-        )
+        # access history: pure observation, fed from the fetch/hit path
+        # below. Shared with the strategy (the access-aware ones consult
+        # it) and the replication economy (which acts on it).
+        if isinstance(strategy, ReplicaStrategy):
+            self.strategy = strategy
+            if strategy.access is not None:
+                self.access = strategy.access   # adopt: one shared history
+            else:
+                self.access = AccessHistory(catalog, topology)
+                strategy.access = self.access
+        else:
+            self.access = AccessHistory(catalog, topology)
+            self.strategy = make_strategy(strategy, catalog, topology,
+                                          self.storage, self.access)
         self.rng = _random.Random(seed)
         self.speculative_backups = speculative_backups
         self.straggler_threshold = straggler_threshold
@@ -179,6 +193,26 @@ class GridSimulator:
                     "'topmost') which does this for you)")
             net = "numpy"
         self.network = NetworkEngine(topology, backend=net)
+        # -- replication economy (proactive, periodic; off by default) ----
+        # econ_interval=None means "auto": the strategies that declare
+        # uses_economy arm the optimizer at the default period, everything
+        # else runs exactly the reactive paper pipeline (no ECON events at
+        # all — the golden HRS/BHR/LRU histories are untouched). An
+        # explicit interval > 0 forces the optimizer on for any strategy.
+        if econ not in ECON_BACKENDS:
+            raise ValueError(f"unknown econ backend {econ!r} "
+                             f"(want one of {ECON_BACKENDS})")
+        if econ_interval is None:
+            econ_interval = (DEFAULT_INTERVAL_S
+                             if self.strategy.uses_economy else 0.0)
+        self._econ_interval = econ_interval
+        if econ_interval > 0:
+            self._econ = ReplicationOptimizer(
+                catalog, topology, self.storage, self.access, self.network,
+                model=self.strategy.econ_model, backend=econ)
+        else:
+            self._econ = None
+        self._econ_armed = False
         if broker == "jax":
             # deferred imports: jaxsched pulls in jax
             if self.scheduler.name == "dataaware":
@@ -188,11 +222,21 @@ class GridSimulator:
                 from .jaxsched import JaxShortestTransferBroker
                 self._jax_broker = JaxShortestTransferBroker(
                     catalog, topology, self.network)
+            elif self.scheduler.name == "leastloaded":
+                from .jaxsched import JaxLeastLoadedBroker
+                self._jax_broker = JaxLeastLoadedBroker(catalog, topology)
+            elif self.scheduler.name == "random":
+                # share the policy's Random: single-job batches (which fall
+                # back to the sequential policy) and batched dispatch then
+                # consume one PRNG stream
+                from .jaxsched import JaxRandomBroker
+                self._jax_broker = JaxRandomBroker(catalog, topology,
+                                                   self.scheduler.rng)
             else:
                 raise ValueError(
-                    "broker='jax' implements only the 'dataaware' and "
-                    "'shortesttransfer' policies; got scheduler "
-                    f"{self.scheduler.name!r}")
+                    "broker='jax' implements the 'dataaware', "
+                    "'shortesttransfer', 'leastloaded' and 'random' "
+                    f"policies; got scheduler {self.scheduler.name!r}")
         elif broker == "event":
             if batch_window > 0:
                 raise ValueError(
@@ -278,9 +322,15 @@ class GridSimulator:
         if eta is not None:
             self._push(eta, NET, self._net_version)
 
-    def _start_transfer(self, plan: FetchPlan, js: _JobState) -> None:
+    def _start_transfer(self, plan: FetchPlan,
+                        js: Optional[_JobState]) -> None:
+        """Start a transfer. ``js`` is the waiting job, or ``None`` for a
+        proactive (economy-initiated) prefetch — same fluid-model slot and
+        link contention either way, but prefetches have no waiter and are
+        accounted as prefetch (not per-job inter-communication) traffic."""
         key = (plan.dst, plan.lfn)
-        if key in self._inflight and self._inflight[key].plan.store:
+        if js is not None and key in self._inflight \
+                and self._inflight[key].plan.store:
             # another job at this site is already fetching it; piggyback
             self._inflight[key].waiters.append(js)
             return
@@ -294,17 +344,25 @@ class GridSimulator:
             self.topology.sites[plan.dst].used_storage += size  # reserve
         self.storage.pin(plan.src, plan.lfn)   # source can't be evicted mid-copy
         self._tid += 1
-        tr = _Transfer(self._tid, plan, link_ids, waiters=[js])
+        tr = _Transfer(self._tid, plan, link_ids,
+                       waiters=[] if js is None else [js])
         self._transfers[tr.tid] = tr
         self.network.alloc(tr, size, link_ids)
         if plan.store:
             self._inflight[key] = tr
         if plan.inter_region:
-            self._inter_comms[js.job.job_id] = self._inter_comms.get(js.job.job_id, 0) + 1
-            self._wan_bytes[js.job.job_id] = self._wan_bytes.get(js.job.job_id, 0.0) + size
+            if js is not None:
+                self._inter_comms[js.job.job_id] = self._inter_comms.get(js.job.job_id, 0) + 1
+                self._wan_bytes[js.job.job_id] = self._wan_bytes.get(js.job.job_id, 0.0) + size
             self.total_wan_bytes += size
         else:
             self.total_lan_bytes += size
+        if js is None:
+            self.access.record_prefetch(plan.src, plan.dst, plan.lfn, size,
+                                        self.now)
+        else:
+            self.access.record_fetch(plan.src, plan.dst, plan.lfn, size,
+                                     plan.inter_region, self.now)
         self._net_rerate(link_ids)
 
     def _finish_transfer(self, tr: _Transfer) -> None:
@@ -374,6 +432,13 @@ class GridSimulator:
         js.missing = [l for l in job.required if not self.storage.holds(site, l)]
         for lfn in job.required:
             self.storage.touch(site, lfn, self.now)
+            # demand signal for the access-aware strategies / economy:
+            # one access per required file at placement, a hit when it
+            # resolved from the site's own SE (pure observation — no
+            # catalog/storage state changes)
+            self.access.record_access(site, lfn, self.now)
+            if lfn not in js.missing:
+                self.access.record_hit(site, lfn, self.now)
         self._fetch_next(js)
 
     def _drain_submit_batch(self, first: Job) -> list[Job]:
@@ -507,6 +572,37 @@ class GridSimulator:
             self._maybe_start_cpu(site)
         self._site_jobs[site].pop(js, None)
 
+    # -- replication economy -------------------------------------------------
+    def _econ_round(self) -> None:
+        """One periodic proactive-replication round: auction the top-valued
+        files (``ReplicationOptimizer.step``) and execute the winners as
+        waiter-less store transfers. Prefetches ride the same fluid model as
+        job fetches — they occupy links and contend with job traffic, so
+        the cost side of the economy is physically real."""
+        assert self._econ is not None
+        self._net_advance()
+        for prop in self._econ.step(self.now):
+            # revalidate against the live state: an earlier winner in this
+            # same round may have pinned a source copy or consumed space
+            if self.storage.holds(prop.dst, prop.lfn) or \
+                    (prop.dst, prop.lfn) in self._inflight:
+                continue
+            if not self.catalog.has_replica(prop.lfn, prop.src):
+                continue
+            if not all(self.storage.holds(prop.dst, l)
+                       and self.storage.evictable(prop.dst, l)
+                       for l in prop.evictions):
+                continue
+            free = self.storage.free(prop.dst) + sum(
+                self.catalog.size(l) for l in prop.evictions)
+            if free < self.catalog.size(prop.lfn):
+                continue
+            self._start_transfer(prop.to_plan(self.topology), None)
+        if len(self.records) < self._n_expected:
+            self._push(self.now + self._econ_interval, ECON, None)
+        else:
+            self._econ_armed = False   # workload drained; disarm
+
     # -- failures / stragglers ----------------------------------------------
     def _fail_site(self, site: int) -> None:
         st = self.topology.sites[site]
@@ -566,6 +662,11 @@ class GridSimulator:
     # -- main loop -----------------------------------------------------------
     def run(self, until: float = float("inf")) -> SimResult:
         self.network.last = 0.0
+        if self._econ is not None and not self._econ_armed:
+            # first optimizer round one interval in — by then the access
+            # history holds a usable demand signal
+            self._econ_armed = True
+            self._push(self.now + self._econ_interval, ECON, None)
         while self._q:
             t, _, kind, payload = heapq.heappop(self._q)
             if t > until:
@@ -629,6 +730,8 @@ class GridSimulator:
                 self._reschedule_cpu(site)
             elif kind == WATCHDOG:
                 self._watchdog(payload)  # type: ignore[arg-type]
+            elif kind == ECON:
+                self._econ_round()
         total_ic = sum(r.inter_comms for r in self.records)
         return SimResult(
             records=self.records,

@@ -69,6 +69,7 @@ class GridConfig:
     job_length: float = 60e9                 # ops; transfer-dominated regime
     interarrival: float = 60.0               # seconds between submissions
     zipf_alpha: float | None = 0.9           # per-job file draw skew (None=fixed sets)
+    hotset_shifts: int = 0                   # mid-run hot-set reshuffles (drift)
     seed: int = 0
     # -- beyond-paper topology shape (None/() = the paper's 2-level grid) --
     tier_fanouts: tuple[int, ...] | None = None
@@ -122,9 +123,14 @@ def job_type_filesets(cfg: GridConfig) -> list[list[str]]:
     return [rng.sample(names, cfg.files_per_job) for _ in range(cfg.n_job_types)]
 
 
-def type_preference_orders(cfg: GridConfig) -> list[list[str]]:
-    """A preference-ordered permutation of the whole catalog per job type."""
-    rng = _random.Random(cfg.seed + 1)
+def type_preference_orders(cfg: GridConfig, phase: int = 0) -> list[list[str]]:
+    """A preference-ordered permutation of the whole catalog per job type.
+
+    ``phase`` re-seeds the permutation — phase 0 is the classic ordering
+    (bit-identical to the pre-``hotset_shifts`` generator); higher phases
+    are the shifted hot sets of a drifting workload.
+    """
+    rng = _random.Random(cfg.seed + 1 + 7919 * phase)
     names = [f"lfn{i:04d}" for i in range(cfg.n_files)]
     orders = []
     for _ in range(cfg.n_job_types):
@@ -157,13 +163,22 @@ def generate_jobs(cfg: GridConfig, n_jobs: int | None = None) -> list[Job]:
     n = cfg.n_jobs if n_jobs is None else n_jobs
     jobs = []
     if cfg.zipf_alpha is None:
+        if cfg.hotset_shifts:
+            raise ValueError("hotset_shifts needs a Zipf workload "
+                             "(zipf_alpha=None draws fixed per-type "
+                             "filesets, which cannot drift)")
         filesets = job_type_filesets(cfg)
         for j in range(n):
             jt = rng.randrange(cfg.n_job_types)
             jobs.append(Job(job_id=j, job_type=jt, required=list(filesets[jt]),
                             length=cfg.job_length))
         return jobs
-    orders = type_preference_orders(cfg)
+    # hot-set drift: the job stream is split into hotset_shifts + 1 equal
+    # phases, each drawing from its own preference orders. With the default
+    # hotset_shifts=0 this is exactly the classic single-phase generator
+    # (same rng consumption, same orders) — bit-identical workloads.
+    n_phases = cfg.hotset_shifts + 1
+    orders_by_phase = [type_preference_orders(cfg, p) for p in range(n_phases)]
     weights = [1.0 / (i + 1) ** cfg.zipf_alpha for i in range(cfg.n_files)]
     cum = []
     acc = 0.0
@@ -172,6 +187,7 @@ def generate_jobs(cfg: GridConfig, n_jobs: int | None = None) -> list[Job]:
         cum.append(acc)
     for j in range(n):
         jt = rng.randrange(cfg.n_job_types)
+        orders = orders_by_phase[j * n_phases // max(1, n)]
         req = _zipf_draw(rng, orders[jt], cfg.files_per_job, cfg.zipf_alpha, cum)
         jobs.append(Job(job_id=j, job_type=jt, required=req,
                         length=cfg.job_length))

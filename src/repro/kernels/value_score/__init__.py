@@ -1,0 +1,4 @@
+from .ops import value_score
+from .ref import value_score_ref
+
+__all__ = ["value_score", "value_score_ref"]

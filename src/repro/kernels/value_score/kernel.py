@@ -1,0 +1,99 @@
+"""Pallas TPU kernel for the replica value-scoring pass.
+
+The replication economy re-scores every (site, file) pair each time its
+periodic DES event fires: ``bestbw[s, f] = max over holders h != s of
+bw[h, s]`` followed by ``value = demand * size / bestbw`` (see ``ref.py``
+for the exact contract). Naively that reduction materializes a
+``(sites, files, sites)`` tensor — ~200 MB at the 500-site scale point —
+so the kernel instead runs a ``fori_loop`` over the holder axis carrying
+an ``(sites, files)`` running max in VMEM: one VPU-shaped fused pass, no
+MXU, peak memory O(sites x files).
+
+Layout: the file axis rides the lanes (padded to 128), the site axis the
+sublanes (padded to 8). The bandwidth matrix is ``(sites, sites)`` with
+the destination axis on lanes. Padding rows of ``presence`` are all zero
+and padded ``bw`` entries are 0, so they never win the max; padded file
+columns score 0 and are sliced off.
+
+Interpret mode runs the same kernel eagerly on CPU; under
+``jax.experimental.enable_x64`` it computes in float64 and is then
+bit-identical to ``ref.value_score_ref`` (max/divide are exact IEEE ops;
+the max-reduction is order-independent) — the contract pinned by
+``tests/test_kernels.py`` and the ``econ="pallas-interpret"`` engine flag.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_LANES = 128
+_SUBLANES = 8
+
+
+def _value_score_kernel(demand_ref, sizes_ref, presence_ref, bw_ref,
+                        out_ref, *, plain: bool):
+    demand = demand_ref[...]                       # (S, F)
+    presence = presence_ref[...]                   # (S, F) 0/1
+    bw = bw_ref[...]                               # (S, S) [holder, dst]
+    n_sites = demand.shape[0]
+    # dst-site index per output row, used to mask self-supply (h == s)
+    row_id = jax.lax.broadcasted_iota(jnp.int32, demand.shape, 0)
+
+    def body(h, best):
+        prow = jax.lax.dynamic_index_in_dim(presence, h, 0,
+                                            keepdims=True)      # (1, F)
+        # bw's dst axis is lane-padded wider than the output's sublane-
+        # padded site axis; keep the first n_sites entries
+        brow = jax.lax.dynamic_index_in_dim(bw, h, 0,
+                                            keepdims=False)[:n_sites]
+        contrib = jnp.where((prow > 0.0) & (row_id != h),
+                            brow[:, None], 0.0)
+        return jnp.maximum(best, contrib)
+
+    best = jax.lax.fori_loop(0, n_sites, body, jnp.zeros_like(demand))
+    if plain:
+        out_ref[...] = jnp.where(best > 0.0, demand, 0.0)
+    else:
+        cost = sizes_ref[0, :][None, :] / best     # inf where best == 0 ...
+        out_ref[...] = jnp.where(best > 0.0, demand * cost, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("plain", "interpret"))
+def _value_score_call(demand, sizes, presence, bw, *, plain: bool,
+                      interpret: bool):
+    kernel = functools.partial(_value_score_kernel, plain=plain)
+    return pl.pallas_call(
+        kernel,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.VMEM)] * 4,
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct(demand.shape, demand.dtype),
+        interpret=interpret,
+    )(demand, sizes, presence, bw)
+
+
+def value_score_kernel(demand, sizes, presence, bw, *, mode: str = "cost",
+                       interpret: bool = False):
+    """Same contract as :func:`..ref.value_score_ref`, computed by the
+    Pallas kernel. Dtypes follow ``demand`` (float32 compiled on TPU,
+    float64 under x64 interpret)."""
+    demand = jnp.asarray(demand)
+    dtype = demand.dtype
+    n_sites, n_files = demand.shape
+    if n_sites == 0 or n_files == 0:
+        return jnp.zeros((n_sites, n_files), dtype)
+    pad_s = (-n_sites) % _SUBLANES
+    pad_f = (-n_files) % _LANES
+    pad_d = (-n_sites) % _LANES          # dst axis of bw rides the lanes
+    demand_p = jnp.pad(demand, ((0, pad_s), (0, pad_f)))
+    sizes_p = jnp.pad(jnp.asarray(sizes, dtype), (0, pad_f)).reshape(1, -1)
+    presence_p = jnp.pad(jnp.asarray(presence, dtype),
+                         ((0, pad_s), (0, pad_f)))
+    bw_p = jnp.pad(jnp.asarray(bw, dtype), ((0, pad_s), (0, pad_d)))
+    out = _value_score_call(demand_p, sizes_p, presence_p, bw_p,
+                            plain=(mode == "plain"), interpret=interpret)
+    return out[:n_sites, :n_files]

@@ -1,0 +1,62 @@
+"""Public wrapper for the value-scoring pass (pallas / interpret / numpy).
+
+Like ``net_rerate``, this op is called from host code (the economy's
+periodic DES event), so it returns host numpy values and picks the route
+per call:
+
+  * ``"auto"``   — the compiled Pallas kernel on TPU; the float64 numpy
+    oracle on CPU (no per-event jax dispatch overhead, bit-identical to
+    the oracle trivially). This is what ``econ="pallas"`` uses.
+  * ``"pallas"`` — force the compiled kernel. Compiled TPU execution is
+    float32 (no f64 on TPU): ~1e-7 relative drift vs the oracle, so the
+    bit-identity contract covers the CPU routes only.
+  * ``"interpret"`` — the kernel under the Pallas interpreter with x64
+    enabled: slow, bit-identical to the oracle; used by the kernel tests
+    and the ``econ="pallas-interpret"`` engine flag.
+  * ``"numpy"``  — the oracle directly.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .ref import MODES, value_score_ref
+
+
+def value_score(demand, sizes, presence, bw, *, mode: str = "cost",
+                backend: str = "auto") -> np.ndarray:
+    """Score the full (sites, files) replica value matrix.
+
+    See :func:`.ref.value_score_ref` for the argument contract. Returns a
+    host float64 array regardless of backend.
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown value_score mode {mode!r} "
+                         f"(want one of {MODES})")
+    if backend in ("auto", "pallas", "interpret"):
+        import jax
+
+        if backend == "pallas" or (backend == "auto"
+                                   and jax.default_backend() == "tpu"):
+            from .kernel import value_score_kernel
+            out = value_score_kernel(
+                np.asarray(demand, np.float32), np.asarray(sizes, np.float32),
+                np.asarray(presence, np.float32), np.asarray(bw, np.float32),
+                mode=mode)
+            return np.asarray(out, np.float64)
+        if backend == "interpret":
+            from jax.experimental import enable_x64
+
+            from .kernel import value_score_kernel
+            with enable_x64():
+                out = value_score_kernel(
+                    np.asarray(demand, np.float64),
+                    np.asarray(sizes, np.float64),
+                    np.asarray(presence, np.float64),
+                    np.asarray(bw, np.float64), mode=mode, interpret=True)
+            return np.asarray(out, np.float64)
+        backend = "numpy"
+    if backend != "numpy":
+        raise ValueError(f"unknown value_score backend {backend!r} "
+                         "(want 'auto'|'pallas'|'interpret'|'numpy')")
+    return value_score_ref(demand, sizes, presence, bw, mode=mode)

@@ -8,13 +8,17 @@ benchmarks (:func:`sweep`), and runs the registry end to end:
 
     PYTHONPATH=src python -m repro.launch.experiments --list
     PYTHONPATH=src python -m repro.launch.experiments --scenario paper_baseline bulk_diana
+    PYTHONPATH=src python -m repro.launch.experiments --scenario drift_strategies   # a named sweep
     PYTHONPATH=src python -m repro.launch.experiments --all
 
 ``--all`` (or an explicit ``--scenario`` list) writes machine-readable
 ``results/BENCH_scenarios.json``: per scenario the full spec plus one row
 per seed with ``wall_s`` / ``avg_job_time_s`` / ``avg_inter_comms`` /
-``completed_jobs`` / ``makespan_s``. ``--jobs N`` overrides every
-scenario's job count for quick smoke passes.
+``completed_jobs`` / ``makespan_s``. ``--scenario`` also accepts named
+:class:`repro.core.SweepSpec` grids (``--list`` shows both registries) —
+a sweep's whole (axis value x seed) grid lands under the payload's
+``"sweeps"`` key, one row per run with the axis value attached.
+``--jobs N`` overrides every scenario's job count for quick smoke passes.
 """
 
 from __future__ import annotations
@@ -26,9 +30,10 @@ import os
 import time
 from typing import Iterable, Sequence
 
-from repro.core import (ExperimentResult, SCENARIOS, ScenarioSpec,
-                        arrival_schedule, get_scenario, injections,
-                        run_experiment, to_grid_config)
+from repro.core import (ExperimentResult, SCENARIOS, SWEEPS, ScenarioSpec,
+                        SweepSpec, arrival_schedule, get_scenario, get_sweep,
+                        injections, run_experiment, to_grid_config,
+                        with_axis)
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results")
@@ -49,7 +54,7 @@ def run_spec(spec: ScenarioSpec, *, seed: int | None = None,
         broker=spec.broker, batch_window=spec.batch_window_s,
         arrival_burst=spec.arrival_burst,
         arrival_times=arrival_schedule(spec, n, seed=seed),
-        net=spec.net,
+        net=spec.net, econ=spec.econ, econ_interval=spec.econ_interval_s,
     )
 
 
@@ -72,11 +77,36 @@ def run_scenario(spec: ScenarioSpec, *, n_jobs: int | None = None,
     return rows
 
 
+def run_sweep_spec(sweep: SweepSpec, *, n_jobs: int | None = None) -> dict:
+    """Run a named sweep: every (axis value, seed) cell of the grid.
+
+    Returns the sweep's ``BENCH_scenarios.json`` entry: the sweep spec,
+    the base scenario, and one row per run with the axis value attached —
+    a grid, not a point.
+    """
+    rows = []
+    for value, cell in sweep.expand():
+        for row in run_scenario(cell, n_jobs=n_jobs):
+            rows.append({sweep.axis: value, **row})
+    return {"sweep": sweep.to_dict(),
+            "base_spec": get_scenario(sweep.base).to_dict(), "rows": rows}
+
+
 def run_scenarios(names: Iterable[str], *, n_jobs: int | None = None,
                   out_path: str | None = None, quiet: bool = False) -> dict:
-    """Run each named scenario and write ``BENCH_scenarios.json``."""
-    payload: dict = {"n_jobs_override": n_jobs, "scenarios": {}}
+    """Run each named scenario *or sweep* and write
+    ``BENCH_scenarios.json`` (scenarios as points under ``"scenarios"``,
+    sweeps as grids under ``"sweeps"``)."""
+    payload: dict = {"n_jobs_override": n_jobs, "scenarios": {}, "sweeps": {}}
     for name in names:
+        if name in SWEEPS:
+            entry = run_sweep_spec(get_sweep(name), n_jobs=n_jobs)
+            payload["sweeps"][name] = entry
+            if not quiet:
+                sw = entry["sweep"]
+                print(f"{name:>16} sweep {sw['base']} x {sw['axis']}="
+                      f"{sw['values']} rows={len(entry['rows'])}")
+            continue
         spec = get_scenario(name)
         rows = run_scenario(spec, n_jobs=n_jobs)
         payload["scenarios"][name] = {"spec": spec.to_dict(), "rows": rows}
@@ -98,31 +128,21 @@ def run_scenarios(names: Iterable[str], *, n_jobs: int | None = None,
 
 
 # -- figure sweeps (used by benchmarks/run.py) ------------------------------
-def _with_axis(spec: ScenarioSpec, axis: str, value) -> ScenarioSpec:
-    if axis == "n_jobs":
-        return dataclasses.replace(spec, n_jobs=int(value))
-    if axis == "wan_mbps":
-        return dataclasses.replace(
-            spec, uplink_mbps=(float(value),) + spec.uplink_mbps[1:])
-    if axis == "scheduler":
-        return dataclasses.replace(spec, scheduler=str(value))
-    if axis == "net":
-        return dataclasses.replace(spec, net=str(value))
-    raise ValueError(f"unknown sweep axis {axis!r}")
-
-
 def sweep(base: ScenarioSpec, *, axis: str, values: Sequence,
           strategies: Sequence[str]) -> dict[tuple, ExperimentResult]:
-    """Cross an axis (``n_jobs`` | ``wan_mbps`` | ``scheduler`` | ``net``)
-    with a set of replication strategies; returns
+    """Cross an axis with a set of replication strategies; returns
     ``{(value, strategy): result}``.
 
     This is the config-driven backbone of the per-figure benchmarks: each
-    cell is ``run_spec`` of the base scenario with two fields replaced.
+    cell is ``run_spec`` of the base scenario with two fields replaced
+    (:func:`repro.core.scenarios.with_axis` defines the axis vocabulary —
+    every spec field plus ``wan_mbps``). Named grids live in
+    :data:`repro.core.SWEEPS` (:class:`SweepSpec`) and run via
+    ``--scenario NAME`` / :func:`run_sweep_spec`.
     """
     out = {}
     for v in values:
-        spec = _with_axis(base, axis, v)
+        spec = with_axis(base, axis, v)
         for s in strategies:
             out[(v, s)] = run_spec(dataclasses.replace(spec, strategy=s))
     return out
@@ -134,11 +154,11 @@ def main(argv: Sequence[str] | None = None) -> None:
                     "registry and write results/BENCH_scenarios.json")
     g = ap.add_mutually_exclusive_group(required=True)
     g.add_argument("--scenario", nargs="+", metavar="NAME",
-                   help="scenario names to run (see --list)")
+                   help="scenario or sweep names to run (see --list)")
     g.add_argument("--all", action="store_true",
-                   help="run every registered scenario")
+                   help="run every registered scenario (sweeps only by name)")
     g.add_argument("--list", action="store_true",
-                   help="list registered scenarios and exit")
+                   help="list registered scenarios + sweeps and exit")
     ap.add_argument("--jobs", type=int, default=None,
                     help="override every scenario's job count")
     ap.add_argument("--out", default=None,
@@ -151,10 +171,14 @@ def main(argv: Sequence[str] | None = None) -> None:
             print(f"{name:>16}  [{fan} sites={spec.n_sites} "
                   f"arrival={spec.arrival} strategy={spec.strategy} "
                   f"broker={spec.broker}]  {spec.description}")
+        for name, sw in sorted(SWEEPS.items()):
+            print(f"{name:>16}  [sweep {sw.base} x {sw.axis}="
+                  f"{list(sw.values)}]  {sw.description}")
         return
     names = sorted(SCENARIOS) if args.all else args.scenario
     for name in names:
-        get_scenario(name)      # fail fast on typos before running anything
+        if name not in SWEEPS:
+            get_scenario(name)  # fail fast on typos before running anything
     run_scenarios(names, n_jobs=args.jobs, out_path=args.out)
 
 

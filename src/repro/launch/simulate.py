@@ -16,8 +16,8 @@ from __future__ import annotations
 import argparse
 import dataclasses
 
-from repro.core import (ChurnSpec, SCENARIOS, STRATEGIES, SCHEDULERS,
-                        ScenarioSpec, get_scenario)
+from repro.core import (ChurnSpec, ECON_BACKENDS, SCENARIOS, STRATEGIES,
+                        SCHEDULERS, ScenarioSpec, get_scenario)
 from repro.core.simulator import NETS
 from repro.launch.experiments import run_spec
 
@@ -41,6 +41,13 @@ def main() -> None:
     ap.add_argument("--net", default=None, choices=list(NETS),
                     help="network-engine backend (default: the scenario's, "
                          "or 'numpy'; 'topmost' = legacy single-uplink model)")
+    ap.add_argument("--econ", default=None, choices=list(ECON_BACKENDS),
+                    help="replication-economy value-scoring backend "
+                         "(default: the scenario's, or 'numpy')")
+    ap.add_argument("--econ-interval", type=float, default=None,
+                    help="seconds between proactive-replication rounds "
+                         "(default: auto — armed only for the economic/"
+                         "predictive strategies; 0 disables)")
     ap.add_argument("--failures", type=int, default=0,
                     help="number of random site failures to inject")
     args = ap.parse_args()
@@ -63,6 +70,10 @@ def main() -> None:
             scheduler=args.scheduler, churn=churn, seeds=(args.seed,))
     if args.net is not None:
         spec = dataclasses.replace(spec, net=args.net)
+    if args.econ is not None:
+        spec = dataclasses.replace(spec, econ=args.econ)
+    if args.econ_interval is not None:
+        spec = dataclasses.replace(spec, econ_interval_s=args.econ_interval)
     print(f"{'strategy':>14} {'avg_job_time':>13} {'inter/job':>10} "
           f"{'WAN GB':>8} {'makespan':>10}")
     for strat in args.strategy:

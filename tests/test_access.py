@@ -1,0 +1,149 @@
+"""AccessHistory: decay math against hand-computed fixtures, accounting
+parity with the simulator's own metrics, and aggregation-view properties."""
+
+import numpy as np
+import pytest
+
+from repro.core import (AccessHistory, GridConfig, GridSimulator,
+                        ReplicaCatalog, build_catalog, build_topology,
+                        generate_jobs)
+
+
+def _world(n_regions=2, sites=3, n_files=6):
+    cfg = GridConfig(n_regions=n_regions, sites_per_region=sites)
+    topo = build_topology(cfg)
+    cat = ReplicaCatalog()
+    for i in range(n_files):
+        cat.register_file(f"lfn{i:04d}", 1e6, i % topo.n_sites)
+    return topo, cat
+
+
+# -- decay math (hand-computed fixture) -------------------------------------
+def test_decay_hand_computed():
+    topo, cat = _world()
+    h = AccessHistory(cat, topo, half_life_s=10.0)
+    h.record_access(0, "lfn0000", now=0.0)
+    # one half-life later the first unit is worth 0.5; add another
+    h.record_access(0, "lfn0000", now=10.0)
+    assert h.site_counts(0, now=10.0)[0] == pytest.approx(1.5)
+    # one more half-life, no new accesses
+    assert h.site_counts(0, now=20.0)[0] == pytest.approx(0.75)
+    # a different cell is untouched
+    assert h.site_counts(1, now=20.0)[0] == 0.0
+    assert h.accesses == 2
+
+
+def test_decay_weight_and_snapshot_normalization():
+    topo, cat = _world()
+    h = AccessHistory(cat, topo, half_life_s=100.0)
+    h.record_access(2, "lfn0001", now=0.0, weight=4.0)
+    snap = h.snapshot(now=200.0)          # two half-lives
+    fidx = h.lfn_index["lfn0001"]
+    assert snap[2, fidx] == pytest.approx(1.0)
+    # snapshot normalized in place: stamps moved, counts rescaled, and a
+    # second snapshot at the same now is identical
+    assert np.array_equal(h.snapshot(now=200.0), snap)
+
+
+def test_scores_ordering_is_time_shift_invariant():
+    topo, cat = _world()
+    h = AccessHistory(cat, topo, half_life_s=50.0)
+    h.record_access(1, "lfn0000", now=0.0, weight=8.0)   # old and big
+    h.record_access(1, "lfn0001", now=100.0)             # fresh and small
+    lfns = ["lfn0000", "lfn0001"]
+    order_now = np.argsort(h.scores(1, lfns))
+    later = h.site_counts(1, now=500.0)[[h.lfn_index[l] for l in lfns]]
+    assert np.array_equal(order_now, np.argsort(later))
+
+
+def test_invalid_half_life_rejected():
+    topo, cat = _world()
+    with pytest.raises(ValueError):
+        AccessHistory(cat, topo, half_life_s=0.0)
+
+
+def test_sync_picks_up_late_registered_files():
+    topo, cat = _world(n_files=2)
+    h = AccessHistory(cat, topo, half_life_s=10.0)
+    h.record_access(0, "lfn0001", now=0.0, weight=3.0)
+    cat.register_file("lfn0000a", 2e6, 1)   # sorts between the two
+    h.record_access(0, "lfn0000a", now=0.0)
+    # old counts carried over by LFN, new column live
+    assert h.site_counts(0, now=0.0)[h.lfn_index["lfn0001"]] == 3.0
+    assert h.site_counts(0, now=0.0)[h.lfn_index["lfn0000a"]] == 1.0
+    assert h.sizes[h.lfn_index["lfn0000a"]] == 2e6
+
+
+# -- aggregation views -------------------------------------------------------
+def test_region_counts_equal_sum_of_member_sites():
+    """Property: for random access patterns, every region row equals the
+    sum of its member sites' rows, and the grid view sums the regions."""
+    topo, cat = _world(n_regions=3, sites=4, n_files=8)
+    rng = np.random.default_rng(7)
+    for trial in range(5):
+        h = AccessHistory(cat, topo, half_life_s=30.0)
+        t = 0.0
+        for _ in range(200):
+            t += float(rng.exponential(5.0))
+            h.record_access(int(rng.integers(topo.n_sites)),
+                            f"lfn{int(rng.integers(8)):04d}", now=t,
+                            weight=float(rng.random() + 0.1))
+        snap = h.snapshot()
+        regional = h.region_counts()
+        for region in topo.regions:
+            np.testing.assert_allclose(
+                regional[region.region_id],
+                snap[region.site_ids].sum(axis=0), rtol=1e-12)
+        np.testing.assert_allclose(h.grid_counts(), regional.sum(axis=0),
+                                   rtol=1e-12)
+
+
+# -- accounting parity with the simulator ------------------------------------
+def _run_sim(strategy="hrs", n_jobs=60, **sim_kw):
+    cfg = GridConfig(n_regions=2, sites_per_region=4)
+    topo = build_topology(cfg)
+    cat = build_catalog(cfg, topo)
+    sim = GridSimulator(topo, cat, strategy=strategy, **sim_kw)
+    for info in cat.files.values():
+        sim.storage.bootstrap(info.master_site, info.lfn)
+    jobs = generate_jobs(cfg, n_jobs)
+    for j, job in enumerate(jobs):
+        sim.submit_job(job, at=j * 60.0)
+    return sim, jobs, sim.run()
+
+
+def test_accounting_parity_with_sim_counters():
+    """The history's fetch counters are incremented at exactly the points
+    the simulator accounts its own metrics, so they agree by construction
+    (reactive strategy: no prefetch traffic in either ledger)."""
+    sim, jobs, res = _run_sim("hrs")
+    h = sim.access
+    assert h.accesses == sum(len(j.required) for j in jobs)
+    assert h.remote_fetches == res.total_inter_comms
+    assert h.wan_bytes == res.total_wan_bytes
+    assert h.lan_bytes == res.total_lan_bytes
+    assert h.prefetches == 0 and h.prefetch_bytes == 0.0
+    assert 0 < h.hits <= h.accesses
+    assert h.fetches >= h.remote_fetches
+
+
+def test_prefetch_accounting_separated():
+    """With the economy armed, proactive transfers land in the prefetch
+    ledger, never in the per-job fetch one; job-driven WAN bytes stay a
+    subset of the simulator's total."""
+    sim, jobs, res = _run_sim("predictive", n_jobs=80)
+    h = sim.access
+    assert len(res.records) == 80
+    assert h.prefetches > 0
+    assert h.remote_fetches == res.total_inter_comms
+    assert h.wan_bytes + h.lan_bytes + h.prefetch_bytes == pytest.approx(
+        res.total_wan_bytes + res.total_lan_bytes)
+
+
+def test_observation_does_not_perturb_reactive_runs():
+    """The tracker is pure observation: an HRS run is bit-identical
+    whether or not anything ever reads the history."""
+    _, _, a = _run_sim("hrs", n_jobs=40)
+    _, _, b = _run_sim("hrs", n_jobs=40)
+    assert a.avg_job_time == b.avg_job_time
+    assert a.total_wan_bytes == b.total_wan_bytes

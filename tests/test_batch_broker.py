@@ -56,6 +56,77 @@ def test_unknown_broker_rejected():
                        n_jobs=1, broker="nope")
 
 
+def _snapshot_world():
+    from repro.core import build_catalog, build_topology
+    cfg = GridConfig(n_regions=2, sites_per_region=4)
+    topo = build_topology(cfg)
+    cat = build_catalog(cfg, topo)
+    return cfg, topo, cat
+
+
+def test_jax_leastloaded_matches_sequential_policy():
+    """Site-for-site: over one shared snapshot the jitted argmin equals
+    the sequential ``(relative_load, site_id)`` min, including load ties
+    and offline-site exclusion."""
+    from repro.core import generate_jobs
+    from repro.core.jaxsched import JaxLeastLoadedBroker
+    from repro.core.scheduler import LeastLoadedScheduler
+    cfg, topo, cat = _snapshot_world()
+    topo.sites[3].queued_work = 5e9
+    topo.sites[1].queued_work = 1e9
+    topo.sites[0].online = False         # lowest id must be skippable
+    seq = LeastLoadedScheduler(cat, topo)
+    broker = JaxLeastLoadedBroker(cat, topo)
+    jobs = generate_jobs(cfg, 16)
+    want = [seq.select_site(j) for j in jobs]        # no placements between
+    got = broker.select_batch([j.required for j in jobs])
+    assert got == want
+
+
+def test_jax_random_matches_sequential_policy():
+    """Site-for-site: the broker's host-PRNG index draw consumes the same
+    ``_randbelow`` stream as ``Random.choice``, so an equally-seeded
+    sequential RandomScheduler makes identical picks."""
+    import random as _random
+
+    from repro.core import generate_jobs
+    from repro.core.jaxsched import JaxRandomBroker
+    from repro.core.scheduler import RandomScheduler
+    cfg, topo, cat = _snapshot_world()
+    topo.sites[5].online = False
+    seq = RandomScheduler(cat, topo, seed=5)
+    broker = JaxRandomBroker(cat, topo, _random.Random(5))
+    jobs = generate_jobs(cfg, 32)
+    want = [seq.select_site(j) for j in jobs]
+    got = broker.select_batch([j.required for j in jobs])
+    assert got == want
+    assert all(topo.sites[s].online for s in got)
+
+
+@pytest.mark.parametrize("scheduler", ["leastloaded", "random"])
+def test_jax_broker_full_run_matches_event_broker(scheduler):
+    """End-to-end: for these policies the batched dispatch consumes state
+    exactly as the sequential one does (leastloaded: bursts land on the
+    shared-snapshot argmin; random: one shared-PRNG draw per job), so a
+    singleton-batch run must equal the event broker bit-for-bit."""
+    cfg = GridConfig(n_regions=2, sites_per_region=4)
+    ev = run_experiment(cfg, scheduler=scheduler, strategy="hrs", n_jobs=40,
+                        broker="event")
+    jx = run_experiment(cfg, scheduler=scheduler, strategy="hrs", n_jobs=40,
+                        broker="jax")
+    assert ev.avg_job_time == jx.avg_job_time
+    assert ev.avg_inter_comms == jx.avg_inter_comms
+    assert jx.completed_jobs == 40
+
+
+def test_jax_broker_burst_runs_complete():
+    for scheduler in ("leastloaded", "random"):
+        r = run_experiment(GridConfig(n_regions=2, sites_per_region=4),
+                           scheduler=scheduler, strategy="hrs", n_jobs=60,
+                           broker="jax", arrival_burst=10)
+        assert r.completed_jobs == 60
+
+
 @pytest.mark.slow
 def test_batch_broker_2k_job_smoke():
     """2k jobs in bursts of 50 through the jitted batch dispatcher."""

@@ -11,6 +11,7 @@ from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.net_rerate import net_rerate, net_rerate_ref
 from repro.kernels.selective_scan.kernel import selective_scan_kernel
 from repro.kernels.selective_scan.ref import selective_scan_ref
+from repro.kernels.value_score import value_score, value_score_ref
 
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
@@ -143,6 +144,72 @@ def test_net_rerate_rejects_unknown_backend():
     with pytest.raises(ValueError, match="backend"):
         net_rerate(np.zeros((1, 1), int), np.ones(1), np.ones(1),
                    np.ones(1), 0.0, backend="cuda")
+
+
+def _value_score_case(seed, sites, files):
+    """Random but realistic scorer inputs: sparse holders, bandwidths in
+    the paper's LAN/WAN range, decayed-count-shaped demand."""
+    rng = np.random.default_rng(seed)
+    demand = rng.random((sites, files)) * 20.0
+    sizes = rng.random(files) * 1e9 + 1e6
+    presence = rng.random((sites, files)) < 0.25
+    presence[0, :] = True                       # every file has a holder row
+    bw = rng.random((sites, sites)) * 1.25e8 + 1e5
+    return demand, sizes, presence, bw
+
+
+@pytest.mark.parametrize("mode", ["cost", "plain"])
+@pytest.mark.parametrize("seed,sites,files", [
+    (0, 4, 8),               # tiny (heavy sublane/lane padding)
+    (1, 13, 100),            # one paper region x the paper catalog
+    (2, 52, 100),            # the full paper grid
+    (3, 37, 260),            # ragged on both axes
+])
+def test_value_score_interpret_matches_oracle(seed, sites, files, mode):
+    """The value-scoring kernel under x64 interpret mode is *bit-identical*
+    to the float64 oracle (max/divide are exact IEEE ops and the
+    max-reduction is order-independent) — the contract behind the
+    ``econ='pallas-interpret'`` engine flag."""
+    demand, sizes, presence, bw = _value_score_case(seed, sites, files)
+    ref = value_score_ref(demand, sizes, presence, bw, mode=mode)
+    out = value_score(demand, sizes, presence, bw, mode=mode,
+                      backend="interpret")
+    assert np.array_equal(out, ref)
+
+
+def test_value_score_auto_backend_on_cpu_is_exact():
+    demand, sizes, presence, bw = _value_score_case(7, 8, 24)
+    ref = value_score_ref(demand, sizes, presence, bw)
+    out = value_score(demand, sizes, presence, bw, backend="auto")
+    assert np.array_equal(out, ref)
+
+
+def test_value_score_self_supply_and_no_holder():
+    """A file whose only holder is the destination itself scores its
+    re-fetch-if-dropped value via *other* holders only; with no other
+    holder it scores 0 (nothing to buy)."""
+    demand = np.full((2, 2), 5.0)
+    sizes = np.array([1e6, 1e6])
+    presence = np.array([[True, True], [False, True]])
+    bw = np.array([[10.0, 20.0], [30.0, 40.0]])
+    v = value_score_ref(demand, sizes, presence, bw, mode="cost")
+    assert v[0, 0] == 0.0                     # sole holder is site 0 itself
+    assert v[0, 1] == pytest.approx(5.0 * 1e6 / 30.0)   # from site 1
+    assert v[1, 0] == pytest.approx(5.0 * 1e6 / 20.0)   # from site 0
+    plain = value_score_ref(demand, sizes, presence, bw, mode="plain")
+    assert plain[0, 0] == 0.0 and plain[1, 0] == 5.0
+
+
+def test_value_score_empty_and_errors():
+    assert value_score_ref(np.zeros((0, 3)), np.ones(3),
+                           np.zeros((0, 3), bool),
+                           np.zeros((0, 0))).shape == (0, 3)
+    with pytest.raises(ValueError, match="mode"):
+        value_score_ref(np.zeros((1, 1)), np.ones(1),
+                        np.ones((1, 1), bool), np.ones((1, 1)), mode="nope")
+    with pytest.raises(ValueError, match="backend"):
+        value_score(np.zeros((1, 1)), np.ones(1), np.ones((1, 1), bool),
+                    np.ones((1, 1)), backend="cuda")
 
 
 def test_selective_scan_streaming_equivalence():

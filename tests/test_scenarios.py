@@ -1,13 +1,15 @@
 """Scenario engine: spec round-trip, n-tier topology invariants, registry
-completeness, and a 2-scenario smoke through the runner."""
+completeness (scenarios, sweeps, and the full strategy registry), and a
+2-scenario smoke through the runner."""
 
 import json
 import math
 
 import pytest
 
-from repro.core import (GridConfig, GridTopology, SCENARIOS, ScenarioSpec,
-                        arrival_schedule, get_scenario, to_grid_config)
+from repro.core import (GridConfig, GridTopology, SCENARIOS, STRATEGIES,
+                        SWEEPS, ScenarioSpec, SweepSpec, arrival_schedule,
+                        get_scenario, get_sweep, to_grid_config, with_axis)
 from repro.core.scenarios import ChurnSpec
 from repro.fault.failures import churn_schedule
 
@@ -34,6 +36,79 @@ def test_get_scenario_unknown_name():
         get_scenario("nope")
 
 
+@pytest.mark.parametrize("strategy", sorted(STRATEGIES))
+def test_every_strategy_runs_paper_baseline(strategy):
+    """Registry-completeness smoke: every STRATEGIES entry — including the
+    access-aware pair — runs the paper baseline at 50 jobs without error
+    and completes every job."""
+    import dataclasses
+
+    from repro.launch.experiments import run_spec
+    spec = dataclasses.replace(SCENARIOS["paper_baseline"],
+                               strategy=strategy)
+    r = run_spec(spec, n_jobs=50)
+    assert r.completed_jobs == r.n_jobs == 50
+    assert r.avg_job_time > 0 and r.makespan > 0
+
+
+# -- sweeps ------------------------------------------------------------------
+def test_sweep_registry_completeness():
+    assert {"starved_strategies", "drift_strategies",
+            "contended_nets", "baseline_wan"} <= set(SWEEPS)
+    for name, sw in SWEEPS.items():
+        assert sw.name == name and sw.description
+        assert sw.base in SCENARIOS
+        cells = sw.expand()
+        assert len(cells) == len(sw.values)
+        for v, cell in cells:
+            assert cell.name == f"{sw.base}@{sw.axis}={v}"
+
+
+def test_sweep_round_trip_and_validation():
+    sw = SWEEPS["drift_strategies"]
+    wire = json.loads(json.dumps(sw.to_dict()))
+    assert SweepSpec.from_dict(wire) == sw
+    with pytest.raises(ValueError, match="axis"):
+        SweepSpec(name="bad", base="paper_baseline", axis="warp",
+                  values=(1,))
+    with pytest.raises(ValueError, match="value"):
+        SweepSpec(name="bad", base="paper_baseline", axis="n_jobs",
+                  values=())
+    with pytest.raises(KeyError):
+        get_sweep("nope")
+    # a sweep cell inherits full spec validation
+    bad = SweepSpec(name="bad", base="paper_baseline", axis="strategy",
+                    values=("magic",))
+    with pytest.raises(ValueError, match="strategy"):
+        bad.expand()
+
+
+def test_with_axis_vocabulary():
+    base = SCENARIOS["paper_baseline"]
+    assert with_axis(base, "n_jobs", 42).n_jobs == 42
+    assert with_axis(base, "strategy", "economic").strategy == "economic"
+    assert with_axis(base, "net", "pallas").net == "pallas"
+    assert with_axis(base, "wan_mbps", 100.0).uplink_mbps[0] == 100.0
+    with pytest.raises(ValueError, match="axis"):
+        with_axis(base, "name", "x")
+
+
+def test_sweep_runner_writes_grid(tmp_path):
+    from repro.launch.experiments import run_scenarios
+    out = tmp_path / "bench.json"
+    payload = run_scenarios(["baseline_wan"], n_jobs=20, out_path=str(out),
+                            quiet=True)
+    entry = payload["sweeps"]["baseline_wan"]
+    rows = entry["rows"]
+    assert len(rows) == len(SWEEPS["baseline_wan"].values)
+    assert {r["wan_mbps"] for r in rows} == set(
+        SWEEPS["baseline_wan"].values)
+    for r in rows:
+        assert r["completed_jobs"] == 20
+    assert json.loads(out.read_text())["sweeps"]["baseline_wan"][
+        "sweep"]["axis"] == "wan_mbps"
+
+
 def test_spec_validation():
     with pytest.raises(ValueError, match="uplink"):
         ScenarioSpec(name="bad", tier_fanouts=(2, 3, 4))  # missing uplink bw
@@ -41,6 +116,11 @@ def test_spec_validation():
         ScenarioSpec(name="bad", arrival="bursty")
     with pytest.raises(ValueError, match="strategy"):
         ScenarioSpec(name="bad", strategy="magic")
+    with pytest.raises(ValueError, match="econ"):
+        ScenarioSpec(name="bad", econ="cuda")
+    # drift needs a Zipf workload: fixed filesets cannot shift
+    with pytest.raises(ValueError, match="Zipf"):
+        ScenarioSpec(name="bad", zipf_alpha=None, hotset_shifts=2)
 
 
 # -- serialization ----------------------------------------------------------
