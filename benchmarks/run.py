@@ -196,19 +196,36 @@ def failover_recovery() -> None:
          f"all_jobs_completed={failed.completed_jobs == failed.n_jobs}")
 
 
-def scale_sweep() -> None:
-    """Beyond-paper: engine scalability sweep (2k/5k/10k jobs, multi-seed)
-    with burst arrivals dispatched through the jitted batch broker (the
-    ``bulk_diana`` scenario at scale). Writes machine-readable
-    ``results/BENCH_scale.json`` alongside the CSVs."""
+def scale_sweep(scale_jobs: int = 100_000) -> None:
+    """Beyond-paper: engine scalability sweep with burst arrivals
+    dispatched through the jitted batch broker — the ``bulk_diana``
+    scenario at 2k/5k/10k jobs on the 52-site paper grid (multi-seed),
+    plus the 500-site / 100k-job ``grid_500`` scale point (incremental
+    presence bitmap + blocked st-cost snapshot hot paths).
+    ``scale_jobs`` caps *every* cell's job count (the CI smoke runs the
+    whole sweep at 2000). Writes machine-readable
+    ``results/BENCH_scale.json``."""
     from repro.core import SCENARIOS
     from repro.launch.experiments import run_scenario
-    bulk = SCENARIOS["bulk_diana"]
     rows = []
     t0 = time.perf_counter()
-    for n, seeds in ((2000, (0, 1, 2)), (5000, (0, 1)), (10000, (0, 1))):
-        for row in run_scenario(bulk, n_jobs=n, seeds=seeds):
+    raw = [("bulk_diana", min(n, scale_jobs), seeds)
+           for n, seeds in ((2000, (0, 1, 2)), (5000, (0, 1)),
+                            (10000, (0, 1)))]
+    raw.append(("grid_500", min(100_000, scale_jobs), (0,)))
+    # a low cap collapses rungs onto the same (scenario, n_jobs) cell:
+    # keep each once, with its widest seed set
+    merged: dict = {}
+    for scen, n, seeds in raw:
+        key = (scen, n)
+        if key not in merged or len(seeds) > len(merged[key]):
+            merged[key] = seeds
+    cells = [(scen, n, seeds) for (scen, n), seeds in merged.items()]
+    for scen, n, seeds in cells:
+        spec = SCENARIOS[scen]
+        for row in run_scenario(spec, n_jobs=n, seeds=seeds):
             rows.append({
+                "scenario": scen, "n_sites": spec.n_sites,
                 "n_jobs": row["n_jobs"], "seed": row["seed"],
                 "wall_s": row["wall_s"],
                 "avg_job_time_s": row["avg_job_time_s"],
@@ -222,10 +239,11 @@ def scale_sweep() -> None:
                    "broker": "jax", "arrival_burst": 50, "rows": rows}, f,
                   indent=1)
     us = (time.perf_counter() - t0) * 1e6 / len(rows)
-    biggest = max(rows, key=lambda r: r["n_jobs"])
+    biggest = max(rows, key=lambda r: (r["n_sites"], r["n_jobs"]))
     _row("scale_sweep", us,
-         f"rows={len(rows)};10k_wall={biggest['wall_s']:.1f}s;"
-         f"10k_completed={biggest['completed_jobs']}")
+         f"rows={len(rows)};500site_wall={biggest['wall_s']:.1f}s;"
+         f"500site_jobs={biggest['n_jobs']};"
+         f"500site_completed={biggest['completed_jobs']}")
 
 
 def strategy_sweep(n_jobs: int = 10000) -> None:
@@ -379,7 +397,8 @@ BENCHES = {
     "failover": (failover_recovery,
                  "fault-tolerance run: failures + speculative backups"),
     "scale_sweep": (scale_sweep,
-                    "2k/5k/10k-job engine scale sweep -> BENCH_scale.json"),
+                    "2k/5k/10k-job + 500-site/100k-job engine scale sweep "
+                    "-> BENCH_scale.json"),
     "strategy_sweep": (strategy_sweep,
                        "reactive vs economic/predictive strategy matrix on "
                        "cache_starved + hotset_drift -> "
@@ -407,6 +426,10 @@ def main(argv=None) -> None:
                          "(default 10000)")
     ap.add_argument("--strategy-jobs", type=int, default=10000,
                     help="job count per strategy_sweep cell (default 10000)")
+    ap.add_argument("--scale-jobs", type=int, default=100_000,
+                    help="cap on every scale_sweep cell's job count "
+                         "(default 100000 = the full 2k/5k/10k + "
+                         "500-site/100k sweep)")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     for name in args.bench or BENCHES:
@@ -415,6 +438,8 @@ def main(argv=None) -> None:
             fn(args.net_jobs)
         elif name == "strategy_sweep":
             fn(args.strategy_jobs)
+        elif name == "scale_sweep":
+            fn(args.scale_jobs)
         else:
             fn()
 

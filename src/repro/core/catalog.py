@@ -3,11 +3,21 @@
 Indexes which sites hold which files; handles queries from the scheduler and
 the per-site replica managers. Master copies are pinned (the paper assumes
 "master site always has a safe copy before deleting").
+
+Change notification: array-backed mirrors of the holder table (the jax
+brokers' presence bitmap — :class:`repro.core.jaxsched.JaxScheduler`) keep
+themselves current *incrementally* instead of rebuilding a ``(sites,
+files)`` scan per dispatch batch. They register through
+:meth:`ReplicaCatalog.add_listener`; every holder-table mutation calls the
+matching ``on_register_file`` / ``on_add_replica`` / ``on_remove_replica``
+callback after the catalog state has changed. With no listeners the hooks
+cost one truthiness check per mutation.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import weakref
 
 
 @dataclasses.dataclass(frozen=True)
@@ -21,6 +31,24 @@ class ReplicaCatalog:
     def __init__(self) -> None:
         self.files: dict[str, FileInfo] = {}
         self._holders: dict[str, set[int]] = {}
+        self._listeners: list[weakref.ref] = []
+
+    # -- change listeners ---------------------------------------------------
+    def add_listener(self, listener: object) -> None:
+        """Subscribe ``listener`` to holder-table changes. It must provide
+        ``on_register_file(lfn)``, ``on_add_replica(lfn, site_id)`` and
+        ``on_remove_replica(lfn, site_id)``; each fires *after* the
+        mutation it reports (idempotent mutations still notify). Held by
+        weak reference: a mirror that is no longer referenced anywhere
+        else is collected instead of being notified forever."""
+        self._listeners = [r for r in self._listeners if r() is not None]
+        self._listeners.append(weakref.ref(listener))
+
+    def _notify(self, method: str, *args) -> None:
+        for ref in self._listeners:
+            sub = ref()
+            if sub is not None:
+                getattr(sub, method)(*args)
 
     # -- registration (paper: "replica manager sends file register request
     #    to RC and RC adds this site to the list of sites") ----------------
@@ -29,15 +57,18 @@ class ReplicaCatalog:
             raise ValueError(f"duplicate file registration: {lfn}")
         self.files[lfn] = FileInfo(lfn, size, master_site)
         self._holders[lfn] = {master_site}
+        self._notify("on_register_file", lfn)
 
     def add_replica(self, lfn: str, site_id: int) -> None:
         self._holders[lfn].add(site_id)
+        self._notify("on_add_replica", lfn, site_id)
 
     def remove_replica(self, lfn: str, site_id: int) -> None:
         info = self.files[lfn]
         if site_id == info.master_site:
             raise ValueError(f"cannot delete master copy of {lfn}")
         self._holders[lfn].discard(site_id)
+        self._notify("on_remove_replica", lfn, site_id)
 
     # -- queries -----------------------------------------------------------
     def holders(self, lfn: str) -> set[int]:

@@ -19,12 +19,28 @@ fuse into one XLA computation.
 This module is also the bridge used by grid/placement.py to run dispatch
 on-device for batches of jobs (vmap over the job axis).
 
+Snapshot maintenance is incremental: the presence bitmap is kept current
+by :class:`repro.core.catalog.ReplicaCatalog` change listeners (one cell
+write per replica add/evict/loss) instead of a Python double loop over
+the whole catalog per batch, and the file axis re-syncs lazily when files
+are registered after broker construction (the same convention
+:class:`repro.core.access.AccessHistory` uses).
+
 Beyond the paper's policy, :class:`JaxShortestTransferBroker` vectorizes the
-``shortesttransfer`` baseline the same way: a *point-bandwidth matrix*
-``B[h, s] = min over link_ids_for(h, s) of bandwidth / (active + 1)`` is
-snapshotted from the NetworkEngine's per-link arrays (one gather-min over a
-static ``(sites, sites, path)`` link-id tensor), and each job's estimated
-(transfer + queue) cost is an einsum-shaped masked reduction over it.
+``shortesttransfer`` baseline the same way: each batch is costed against
+the engine-shared point-bandwidth snapshot
+(:meth:`repro.core.network.NetworkEngine.point_bandwidth_matrix`, the same
+matrix the replication economy prices with) through the *blocked*
+``repro.kernels.st_cost`` pass — running-max over holders, running-sum
+over files — so peak broker memory is O(sites x files + sites x sites),
+never the old ``(sites, files, sites)`` broadcast.
+
+Degenerate-snapshot semantics match the sequential policies: dispatching
+against a snapshot with **no online site** raises exactly what the
+sequential policy would (``ValueError`` from the empty ``min``/``max`` for
+the deterministic policies, ``IndexError`` from ``Random.choice(())`` for
+``random`` — with no PRNG draw consumed), instead of argmin-over-inf
+silently landing every job on site 0.
 """
 
 from __future__ import annotations
@@ -63,6 +79,12 @@ class JaxScheduler:
     presence bitmap, per-site load/capacity/online vectors and
     required-file masks built here are shared with
     :class:`JaxShortestTransferBroker`.
+
+    The presence bitmap is maintained **incrementally**: the broker
+    registers as a catalog change listener and flips single cells as
+    replicas are added/evicted/lost. Files registered after construction
+    are picked up by the lazy :meth:`sync` (cheap count check per batch),
+    which rebuilds the file axis carrying maintained columns over.
     """
 
     def __init__(self, catalog: ReplicaCatalog, topology: GridTopology) -> None:
@@ -70,16 +92,79 @@ class JaxScheduler:
         self.topology = topology
         self.lfns = sorted(catalog.files)
         self.lfn_index = {l: i for i, l in enumerate(self.lfns)}
-        self.sizes = jnp.asarray([catalog.size(l) for l in self.lfns], jnp.float32)
+        self._sizes_np = np.array([catalog.size(l) for l in self.lfns],
+                                  np.float64)
+        self.sizes = jnp.asarray(self._sizes_np, jnp.float32)
+        self._n_catalog = len(catalog.files)
+        self._presence: np.ndarray | None = None    # built on first use
+        catalog.add_listener(self)
+
+    # -- catalog change listeners (incremental presence maintenance) -------
+    def on_register_file(self, lfn: str) -> None:
+        """New file axis entry; the next :meth:`sync` rebuilds (lazily —
+        registration bursts cost one rebuild, not one per file)."""
+
+    def on_add_replica(self, lfn: str, site_id: int) -> None:
+        if self._presence is not None:
+            j = self.lfn_index.get(lfn)
+            if j is not None:
+                self._presence[site_id, j] = True
+
+    def on_remove_replica(self, lfn: str, site_id: int) -> None:
+        if self._presence is not None:
+            j = self.lfn_index.get(lfn)
+            if j is not None:
+                self._presence[site_id, j] = False
+
+    # -- catalog sync ------------------------------------------------------
+    def sync(self) -> None:
+        """Pick up files registered in the catalog *after* construction
+        (dynamic workloads, late-registered artifacts): rebuild the file
+        axis in sorted order, carrying the incrementally-maintained
+        presence columns over by LFN and filling new columns from the
+        catalog. No-op when the catalog is unchanged."""
+        if len(self.catalog.files) == self._n_catalog:
+            return
+        old_index = self.lfn_index
+        old_presence = self._presence
+        self.lfns = sorted(self.catalog.files)
+        self.lfn_index = {l: i for i, l in enumerate(self.lfns)}
+        self._sizes_np = np.array([self.catalog.size(l) for l in self.lfns],
+                                  np.float64)
+        self.sizes = jnp.asarray(self._sizes_np, jnp.float32)
+        if old_presence is not None:
+            presence = np.zeros((self.topology.n_sites, len(self.lfns)), bool)
+            for j, lfn in enumerate(self.lfns):
+                i = old_index.get(lfn)
+                if i is not None:
+                    presence[:, j] = old_presence[:, i]
+                else:
+                    self._fill_column(presence, j, lfn)
+            self._presence = presence
+        self._n_catalog = len(self.catalog.files)
+        self._resync()
+
+    def _resync(self) -> None:
+        """Hook for subclasses with extra per-file state (e.g. masters)."""
+
+    def _fill_column(self, presence: np.ndarray, j: int, lfn: str) -> None:
+        """One file's presence column from the catalog's holder set — the
+        single definition of what a bitmap cell means."""
+        for h in self.catalog.holders(lfn):
+            presence[h, j] = True
 
     # -- host-side snapshot pieces (shared by all brokers) -----------------
     def presence_np(self) -> np.ndarray:
-        """bool[n_sites, n_files] replica bitmap (all holders)."""
-        presence = np.zeros((self.topology.n_sites, len(self.lfns)), bool)
-        for j, lfn in enumerate(self.lfns):
-            for h in self.catalog.holders(lfn):
-                presence[h, j] = True
-        return presence
+        """bool[n_sites, n_files] replica bitmap (all holders).
+
+        The *live* incrementally-maintained array — treat it as
+        read-only; copy before masking (``presence & ...`` does)."""
+        if self._presence is None:
+            presence = np.zeros((self.topology.n_sites, len(self.lfns)), bool)
+            for j, lfn in enumerate(self.lfns):
+                self._fill_column(presence, j, lfn)
+            self._presence = presence
+        return self._presence
 
     def site_state_np(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(load, capacity, online) per-site vectors."""
@@ -96,8 +181,17 @@ class JaxScheduler:
                 m[i, self.lfn_index[lfn]] = True
         return m
 
+    @staticmethod
+    def _check_online(online: np.ndarray) -> None:
+        """All-offline guard, shared by every broker: raise exactly what
+        the sequential policies' empty ``min``/``max`` raises instead of
+        letting an argmin-over-inf dispatch to (offline) site 0."""
+        if not online.any():
+            raise ValueError("no online sites to dispatch to")
+
     def snapshot(self):
         load, cap, online = self.site_state_np()
+        self._check_online(online)
         return (jnp.asarray(self.presence_np()), self.sizes,
                 jnp.asarray(load), jnp.asarray(cap), jnp.asarray(online))
 
@@ -105,22 +199,29 @@ class JaxScheduler:
         return jnp.asarray(self.required_np([required])[0])
 
     def select(self, required: list[str]) -> int:
+        self.sync()
         presence, sizes, load, cap, online = self.snapshot()
         return int(select_site_vec(presence, sizes, self.required_mask(required),
                                    load, cap, online))
 
     def select_batch(self, required_sets: list[list[str]]) -> list[int]:
+        self.sync()
         presence, sizes, load, cap, online = self.snapshot()
         masks = jnp.asarray(self.required_np(required_sets))
-        return [int(i) for i in
-                select_sites_batch(presence, sizes, masks, load, cap, online)]
+        # one host transfer for the whole batch (per-element int() would
+        # sync the device once per job)
+        return np.asarray(
+            select_sites_batch(presence, sizes, masks, load, cap, online)
+        ).tolist()
 
 
 @jax.jit
 def leastloaded_select(load, capacity, online):
     """LeastLoaded as one fused computation: argmin of relative load over
     online sites. ``jnp.argmin`` returns the first (lowest-id) minimum,
-    matching the sequential policy's ``(relative_load, site_id)`` key."""
+    matching the sequential policy's ``(relative_load, site_id)`` key.
+    Callers must reject all-offline snapshots host-side — an argmin over
+    all-``inf`` would silently return site 0."""
     rel = jnp.where(online, load / capacity, jnp.inf)
     return jnp.argmin(rel)
 
@@ -137,6 +238,7 @@ class JaxLeastLoadedBroker(JaxScheduler):
 
     def select_batch(self, required_sets: list[list[str]]) -> list[int]:
         load, cap, online = self.site_state_np()
+        self._check_online(online)
         site = int(leastloaded_select(jnp.asarray(load), jnp.asarray(cap),
                                       jnp.asarray(online)))
         return [site] * len(required_sets)
@@ -150,7 +252,10 @@ class JaxRandomBroker(JaxScheduler):
     RandomScheduler`: ``rng.choice(seq)`` consumes exactly one
     ``_randbelow(len(seq))`` draw, and so does ``rng.randrange(n)`` here —
     share (or equally seed) the policy's ``Random`` and the decision
-    streams coincide.
+    streams coincide. With no online site the sequential policy's
+    ``choice`` raises ``IndexError`` *without* touching the PRNG
+    (``_randbelow(0)`` draws nothing), so the broker does the same — the
+    shared stream stays aligned across a caught churn-to-zero window.
     """
 
     def __init__(self, catalog: ReplicaCatalog, topology: GridTopology,
@@ -161,76 +266,74 @@ class JaxRandomBroker(JaxScheduler):
     def select_batch(self, required_sets: list[list[str]]) -> list[int]:
         _, _, online = self.site_state_np()
         ids = np.flatnonzero(online)
+        if ids.size == 0:
+            raise IndexError("cannot choose from an empty online-site list")
         idx = np.array([self.rng.randrange(len(ids))
                         for _ in required_sets], np.intp)
-        return [int(s) for s in jnp.take(jnp.asarray(ids), jnp.asarray(idx))]
-
-
-@jax.jit
-def st_costs_batch(path, valid, link_bw, link_act, presence, fetch_mask,
-                   sizes, required, rel, online):
-    """ShortestTransfer (Chang et al. [6]) as one fused computation.
-
-    path/valid: i32/bool[n_sites, n_sites, max_links] — static link-id
-    tensor (``[h, s]`` row = ``link_ids_for(h, s)``, -1 padded); link_bw /
-    link_act: f32[n_links] — the NetworkEngine arrays; presence:
-    bool[n_sites, n_files]; fetch_mask: presence restricted to fetchable
-    holders (online or durable master); required: bool[n_jobs, n_files].
-    Returns f32[n_jobs, n_sites] costs (inf for offline sites).
-    """
-    share = link_bw / (link_act + 1.0)                       # + the new flow
-    b = jnp.where(valid, share[jnp.maximum(path, 0)], jnp.inf)
-    b = jnp.min(b, axis=-1)                                  # B[h, s]
-    # best fetchable source per (file, dst): max over holders of B[h, s]
-    bestbw = jnp.max(
-        jnp.where(fetch_mask[:, :, None], b[:, None, :], 0.0), axis=0)
-    t_fs = jnp.where(bestbw > 0.0, sizes[:, None] / bestbw, jnp.inf)
-    # files the job still needs at s (zero-bw guard -> inf cost survives)
-    miss = required[:, :, None] & ~presence.T[None, :, :]    # [J, F, S]
-    t = jnp.sum(jnp.where(miss, t_fs[None], 0.0), axis=1)    # [J, S]
-    cost = jnp.maximum(t, rel[None, :])
-    return jnp.where(online[None, :], cost, jnp.inf)
+        return np.asarray(
+            jnp.take(jnp.asarray(ids), jnp.asarray(idx))).tolist()
 
 
 class JaxShortestTransferBroker(JaxScheduler):
     """Vectorized ``shortesttransfer`` dispatch over a shared snapshot.
 
     Mirrors :meth:`repro.core.scheduler.ShortestTransferScheduler.
-    select_site` — including the durable-masters rule and the zero-bandwidth
-    guard — but costs every (job, site) pair at once against a
-    point-bandwidth matrix built from the NetworkEngine's per-link
-    bandwidth/occupancy arrays. Like the dataaware batch broker, all jobs
-    in a batch see the same snapshot (queued work is not updated between
-    batch members).
+    select_site` — including the durable-masters rule, the zero-bandwidth
+    guard and the all-``inf`` tie rule (first online site) — but costs
+    every (job, site) pair at once through the blocked
+    :func:`repro.kernels.st_cost.st_cost` pass against the
+    **engine-shared** point-bandwidth snapshot
+    (:meth:`repro.core.network.NetworkEngine.point_bandwidth_matrix`):
+    one cached ``(sites, sites, depth)`` link tensor serves this broker
+    and the replication economy alike, and no private path tensor is
+    built. The file axis is restricted to the batch's required-file
+    union before costing — bit-exact (absent files contribute exact
+    zeros) and it keeps the per-batch oracle work O(union x sites).
+    Like the dataaware batch broker, all jobs in a batch see the same
+    snapshot (queued work is not updated between batch members).
     """
 
     def __init__(self, catalog: ReplicaCatalog, topology: GridTopology,
                  network) -> None:
         super().__init__(catalog, topology)
         self.network = network
+        self._resync()
+        # st_cost route, re-resolved per call ("auto" = compiled Pallas
+        # kernel on TPU, float64 oracle on CPU); tests may override
+        self._backend = "auto"
+
+    def _resync(self) -> None:
         self.masters = np.array(
-            [catalog.files[l].master_site for l in self.lfns], np.intp)
-        n = topology.n_sites
-        path = np.full((n, n, network.max_links), -1, np.int32)
-        for h in range(n):
-            for s in range(n):
-                ids = topology.link_ids_for(h, s)
-                path[h, s, : len(ids)] = ids
-        self.path = jnp.asarray(path)
-        self.path_valid = jnp.asarray(path >= 0)
+            [self.catalog.files[l].master_site for l in self.lfns], np.intp)
 
     def select_batch(self, required_sets: list[list[str]]) -> list[int]:
+        from repro.kernels.st_cost import st_cost  # jax-free package import
+        self.sync()
         presence = self.presence_np()
-        load, cap, online = self.site_state_np()
+        online = np.array([s.online for s in self.topology.sites], bool)
+        self._check_online(online)
+        required = self.required_np(required_sets)
+        # restrict every file-axis input to the batch's required-file
+        # union up front (ascending ids, so sum order is preserved)
+        union = np.flatnonzero(required.any(axis=0))
+        presence_u = presence[:, union]
         # fetchable = online holder, or the durable master copy
-        files = np.arange(len(self.lfns))
-        fetch_mask = presence & online[:, None]
-        fetch_mask[self.masters, files] |= presence[self.masters, files]
-        costs = st_costs_batch(
-            self.path, self.path_valid,
-            jnp.asarray(self.network.link_bw, jnp.float32),
-            jnp.asarray(self.network.link_act, jnp.float32),
-            jnp.asarray(presence), jnp.asarray(fetch_mask), self.sizes,
-            jnp.asarray(self.required_np(required_sets)),
-            jnp.asarray(load / cap), jnp.asarray(online))
-        return [int(i) for i in jnp.argmin(costs, axis=1)]
+        files = np.arange(union.size)
+        masters_u = self.masters[union]
+        fetch_mask = presence_u & online[:, None]
+        fetch_mask[masters_u, files] |= presence_u[masters_u, files]
+        # relative load in float64 straight from the sites — the exact
+        # doubles the sequential policy reads
+        rel = np.array([s.relative_load() for s in self.topology.sites],
+                       np.float64)
+        costs = st_cost(
+            self.network.point_bandwidth_matrix(),
+            fetch_mask, presence_u, self._sizes_np[union],
+            required[:, union], rel, online, backend=self._backend)
+        picks = np.argmin(costs, axis=1)
+        # every online site at inf (nothing fetchable at finite cost):
+        # the sequential (cost, site_id) min takes the first online site
+        stuck = ~np.isfinite(costs[np.arange(len(picks)), picks])
+        if stuck.any():
+            picks[stuck] = np.flatnonzero(online)[0]
+        return [int(i) for i in picks]

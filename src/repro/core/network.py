@@ -163,19 +163,16 @@ class NetworkEngine:
 
     def point_bandwidth_matrix(self) -> np.ndarray:
         """``B[h, s]`` = :meth:`point_bandwidth` for every (source, dst)
-        pair, as one vectorized gather-min over a cached static
-        ``(sites, sites, depth)`` link-id tensor (the same tensor shape
-        the jitted shortest-transfer broker snapshots). The diagonal is
-        the source NIC share (no uplinks crossed); economy consumers mask
-        self-supply themselves."""
+        pair, as one vectorized gather-min over the cached static
+        ``(sites, sites, depth)`` link-id tensor
+        (:meth:`GridTopology.pair_link_matrix`). This is the one shared
+        point-bandwidth snapshot: the replication economy prices
+        transfers off it and the jitted shortest-transfer broker costs
+        dispatch batches off it, so neither builds a private path tensor.
+        The diagonal is the source NIC share (no uplinks crossed);
+        consumers mask self-supply themselves."""
         if self._pair_paths is None:
-            n = self.topology.n_sites
-            paths = np.full((n, n, self.max_links), -1, np.intp)
-            for h in range(n):
-                for s in range(n):
-                    ids = self.topology.link_ids_for(h, s)
-                    paths[h, s, : len(ids)] = ids
-            self._pair_paths = paths
+            self._pair_paths = self.topology.pair_link_matrix()
         share = self.link_bw / (self.link_act + 1.0)
         p = self._pair_paths
         valid = p >= 0
@@ -200,9 +197,10 @@ class NetworkEngine:
         slot twice (it sits in several changed link groups) is harmless.
 
         ``share`` is an optional precomputed per-link share vector
-        (``link_bw / max(1, link_act)``) — the pallas backend hoists it
-        once per event; element-wise it is the exact same IEEE division,
-        so both forms produce identical rates."""
+        (``link_bw / max(1, link_act)``) — ``rerate`` hoists it once per
+        event when the batch is big enough to amortize it; element-wise
+        it is the exact same IEEE division, so both forms produce
+        identical rates."""
         n = len(slots)
         if n == 0:
             return
@@ -233,12 +231,12 @@ class NetworkEngine:
         All three routes compute the same pure function of link occupancy
         and give identical results; they differ only in batching:
 
-        * numpy — per-link incremental: re-rate each changed link's member
-          slots (per-slot bandwidth/occupancy gathers), then scan for the
-          next completion on the host.
-        * pallas — the kernel's formulation: one per-link share vector per
-          event, then a single gather-min per changed-link batch. On TPU
-          each batch is a compiled ``net_rerate`` kernel call; on CPU the
+        * numpy — incremental: re-rate the union of the changed links'
+          member slots in one vectorized gather-min (small unions take a
+          scalar fast path), then scan for the next completion on the
+          host.
+        * pallas — the kernel's formulation of the same union batch. On
+          TPU it is a compiled ``net_rerate`` kernel call; on CPU the
           identical expression runs inline in numpy (measurably faster
           than the incremental baseline at the 10k-job scale point — see
           ``results/BENCH_net.json``). Host next-completion scan.
@@ -255,26 +253,32 @@ class NetworkEngine:
                                    self.link_act, now, backend="interpret")
             self.rate[:] = rate
             return eta if np.isfinite(eta) else None
+        # union the changed links' member slots first: a transfer whose
+        # path crosses several changed links (source NIC + uplinks) is
+        # re-rated once instead of once per link. Rates are pure functions
+        # of current occupancy, so this is exactly the same computation.
+        changed = list(changed)
+        if len(changed) == 1:
+            slots = self.members[changed[0]]
+        else:
+            slots = set().union(*(self.members[li] for li in changed)) \
+                if changed else set()
         if self._use_kernel:
-            for li in changed:
-                slots = self.members[li]
+            if slots:
                 idx = np.fromiter(slots, np.intp, len(slots))
                 rate, _ = self._op(self.path[idx], self.rem[idx],
                                    self.link_bw, self.link_act, now,
                                    backend="pallas")
                 self.rate[idx] = rate
-        elif self._ops_backend is not None:
-            # CPU route, same structure as the kernel: the per-link share
-            # vector is computed once per event (occupancy is fixed while
-            # re-rating) and every batch is a gather-min against it —
-            # strictly less work per batch than the incremental baseline's
-            # per-slot bandwidth/occupancy gathers.
-            share = self.link_bw / np.maximum(1.0, self.link_act)
-            for li in changed:
-                self._rate_slots(self.members[li], share)
         else:
-            for li in changed:
-                self._rate_slots(self.members[li])
+            # share vector hoisted once per event (occupancy is fixed
+            # while re-rating) for both CPU routes when the batch is big
+            # enough to amortize it: element-wise it is the exact same
+            # IEEE division as the per-slot gather, so rates are
+            # bit-identical either way.
+            share = (self.link_bw / np.maximum(1.0, self.link_act)
+                     if len(slots) > 4 else None)
+            self._rate_slots(slots, share)
         if self.n_active == 0:
             return None
         live = self.rate > 0.0   # released slots are zeroed, so live ⊆ active

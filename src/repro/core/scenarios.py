@@ -408,6 +408,33 @@ register_scenario(ScenarioSpec(
 ))
 
 register_scenario(ScenarioSpec(
+    name="grid_500",
+    description="The OptorSim-scale point: 500 sites (5 clusters x 10 "
+                "groups x 10 sites, 500/1000 Mbps graded uplinks, 50 GB "
+                "SEs) over a 1000-file / 500 GB catalog, 100k jobs "
+                "arriving in bursts of 50, each burst placed by one "
+                "jitted batch decision against the incremental presence "
+                "bitmap. Sized to run *sustainably* — makespan tracks "
+                "the arrival span and inter-comms settle near the "
+                "paper's — so the benchmark measures engine throughput, "
+                "not backlog pathology. The ROADMAP's scale target; "
+                "`benchmarks/run.py scale_sweep` runs it as its largest "
+                "point.",
+    probes="engine scale (OptorSim-scale grid studies; 500-site / "
+           "100k-job ROADMAP item); blocked st_cost + incremental "
+           "snapshot hot paths",
+    tier_fanouts=(5, 10, 10),
+    uplink_mbps=(500.0, 1000.0),
+    storage_gb=50.0,
+    catalog_gb=500.0,
+    n_jobs=100_000,
+    n_job_types=10,
+    interarrival_s=15.0,
+    arrival_burst=50,
+    broker="jax",
+))
+
+register_scenario(ScenarioSpec(
     name="cache_starved",
     description="Paper grid with 2 GB SEs: a site can hold at most 4 of "
                 "the 12 files a job needs, so eviction policy dominates.",

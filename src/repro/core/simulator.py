@@ -16,24 +16,30 @@ lives in :class:`repro.core.network.NetworkEngine`; the ``net=`` flag picks
 its backend (``"numpy"`` incremental re-rating, ``"pallas"`` the vectorized
 kernel path, ``"topmost"`` the legacy single-uplink accounting).
 
-Engine hot paths are built for 10k-job scale:
+Engine hot paths are built for 100k-job / 500-site scale (the ``grid_500``
+scenario is the pinned scale point):
   * transfer state (remaining bytes, rate, link-path membership) lives in
     slot-indexed numpy arrays inside the NetworkEngine; advancing the fluid
     model and scanning for the next completion are vectorized instead of
     per-transfer Python loops;
   * re-rating is incremental: only transfers sharing a link whose membership
-    changed are re-rated (rates are pure functions of link occupancy, so this
-    is exactly equivalent to a full recompute — bit-identical results);
+    changed are re-rated, as one union batch per event (rates are pure
+    functions of link occupancy, so this is exactly equivalent to a full
+    recompute — bit-identical results);
   * CPU queues are deques and site-job sets are ordered dicts with O(1)
     removal; cancelled jobs tombstone in place (``done`` flag) and are
     skipped when popped, never removed by O(n) scans.
   * optionally, scheduling decisions are dispatched in jitted batches via
     ``repro.core.jaxsched`` (``broker="jax"``): simultaneous SUBMIT events
     (burst arrivals) are placed with one vectorized argmax over a shared
-    catalog/load snapshot; with ``batch_window`` > 0 arrivals are held up to
-    that many seconds and flushed as one batch (batching adds latency, never
-    causality violations). The default ``broker="event"`` keeps the
-    paper-exact sequential semantics.
+    catalog/load snapshot — the presence bitmap behind it is maintained
+    incrementally through catalog change listeners, never rebuilt per
+    batch, and the shortest-transfer variant costs batches through the
+    blocked ``repro.kernels.st_cost`` pass over the engine-shared
+    point-bandwidth snapshot; with ``batch_window`` > 0 arrivals are held
+    up to that many seconds and flushed as one batch (batching adds
+    latency, never causality violations). The default ``broker="event"``
+    keeps the paper-exact sequential semantics.
 
 Beyond the paper (fault-tolerance axis of this framework):
   * site failure/recovery events — non-master replicas lost, queued jobs

@@ -235,6 +235,9 @@ class GridTopology:
             tuple(off + a for off, a in zip(self._uplink_offset, self._anc[s]))
             for s in range(n_sites)
         ]
+        # flat region-id table: region_of is the replica strategies' inner
+        # loop (millions of calls per run at the 500-site scale point)
+        self._region_ids: list[int] = [s.region_id for s in self.sites]
 
     # -- structure queries ------------------------------------------------
     @property
@@ -247,7 +250,7 @@ class GridTopology:
         return len(self.tier_fanouts)
 
     def region_of(self, site_id: int) -> int:
-        return self.sites[site_id].region_id
+        return self._region_ids[site_id]
 
     def same_region(self, a: int, b: int) -> bool:
         return self.region_of(a) == self.region_of(b)
@@ -311,6 +314,37 @@ class GridTopology:
         ``n_sites + i``."""
         n = len(self.sites)
         return (src,) + tuple(n + u for u in self.uplink_path(src, dst))
+
+    def pair_link_matrix(self) -> "np.ndarray":
+        """Every pair's :meth:`link_ids_for` row as one ``(n_sites,
+        n_sites, depth)`` int tensor, -1 where no link is crossed
+        (``[src, dst, 0]`` is always the source NIC). Built vectorized
+        from the ancestor tables — at 500 sites the per-pair Python loop
+        is 250k ``link_ids_for`` calls, which used to dominate broker
+        construction. This is the shared path-tensor snapshot behind both
+        :meth:`repro.core.network.NetworkEngine.point_bandwidth_matrix`
+        and the jitted shortest-transfer broker; consumers mask on
+        ``>= 0``, so hole positions within a row carry no meaning."""
+        import numpy as np
+        n = len(self.sites)
+        levels = self._n_uplink_levels
+        anc = np.asarray(self._anc, dtype=np.intp).reshape(n, levels)
+        uplinks = np.asarray(self._site_uplinks,
+                             dtype=np.intp).reshape(n, levels)
+        out = np.full((n, n, self.depth), -1, np.intp)
+        out[:, :, 0] = np.arange(n)[:, None]           # source NIC
+        differs = anc[:, None, :] != anc[None, :, :]   # (S, S, levels)
+        crosses = differs[:, :, -1]                    # leaf-group differs
+        # first divergent level; meaningless where nothing differs, but
+        # those pairs are masked by ``crosses`` below
+        div = np.argmax(differs, axis=2)
+        lvl = np.arange(levels)[None, None, :]
+        if self.path_model == "topmost":
+            use = crosses[:, :, None] & (lvl == div[:, :, None])
+        else:
+            use = crosses[:, :, None] & (lvl >= div[:, :, None])
+        out[:, :, 1:] = np.where(use, uplinks[:, None, :] + n, -1)
+        return out
 
     def point_bandwidth(self, src: int, dst: int) -> float:
         """Available bandwidth if one more transfer joined src->dst.

@@ -1,0 +1,67 @@
+"""Public wrapper for the shortest-transfer cost pass (pallas / interpret /
+numpy).
+
+Like ``value_score``, this op is called from host code (the jitted
+``shortesttransfer`` broker, once per dispatch batch), so it takes and
+returns host numpy values and picks the route per call:
+
+  * ``"auto"``   — the compiled Pallas kernel on TPU; the float64 numpy
+    oracle on CPU (no per-batch jax dispatch overhead, bit-identical to
+    the oracle trivially). This is what the broker uses.
+  * ``"pallas"`` — force the compiled kernel. Compiled TPU execution is
+    float32 (no f64 on TPU): ~1e-7 relative drift vs the oracle, so the
+    bit-identity contract covers the CPU routes only.
+  * ``"interpret"`` — the kernel under the Pallas interpreter with x64
+    enabled: slow, bit-identical to the oracle; used by the kernel tests.
+  * ``"numpy"``  — the oracle directly.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .ref import st_cost_ref
+
+
+def st_cost(bw, fetch_mask, presence, sizes, required, rel, online, *,
+            backend: str = "auto") -> np.ndarray:
+    """Cost the full (jobs, sites) dispatch matrix of one batch.
+
+    See :func:`.ref.st_cost_ref` for the argument contract. Returns a
+    host float64 array regardless of backend.
+    """
+    if backend in ("auto", "pallas", "interpret"):
+        import jax
+
+        if backend == "pallas" or (backend == "auto"
+                                   and jax.default_backend() == "tpu"):
+            from .kernel import st_cost_kernel
+            out = st_cost_kernel(
+                np.asarray(bw, np.float32),
+                np.asarray(fetch_mask, np.float32),
+                np.asarray(presence, np.float32),
+                np.asarray(sizes, np.float32),
+                np.asarray(required, np.float32),
+                np.asarray(rel, np.float32),
+                np.asarray(online, np.float32))
+            return np.asarray(out, np.float64)
+        if backend == "interpret":
+            from jax.experimental import enable_x64
+
+            from .kernel import st_cost_kernel
+            with enable_x64():
+                out = st_cost_kernel(
+                    np.asarray(bw, np.float64),
+                    np.asarray(fetch_mask, np.float64),
+                    np.asarray(presence, np.float64),
+                    np.asarray(sizes, np.float64),
+                    np.asarray(required, np.float64),
+                    np.asarray(rel, np.float64),
+                    np.asarray(online, np.float64), interpret=True)
+            return np.asarray(out, np.float64)
+        backend = "numpy"
+    if backend != "numpy":
+        raise ValueError(f"unknown st_cost backend {backend!r} "
+                         "(want 'auto'|'pallas'|'interpret'|'numpy')")
+    return st_cost_ref(bw, fetch_mask, presence, sizes, required, rel,
+                       online)

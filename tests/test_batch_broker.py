@@ -127,6 +127,118 @@ def test_jax_broker_burst_runs_complete():
         assert r.completed_jobs == 60
 
 
+def test_jax_random_churn_to_zero_matches_sequential():
+    """With every site offline the sequential policy's ``Random.choice``
+    raises IndexError *without* consuming a PRNG draw; the broker must do
+    exactly the same, so a shared stream stays aligned across a caught
+    churn-to-zero window and picks coincide site-for-site afterwards."""
+    import random as _random
+
+    from repro.core import generate_jobs
+    from repro.core.jaxsched import JaxRandomBroker
+    from repro.core.scheduler import RandomScheduler
+    cfg, topo, cat = _snapshot_world()
+    seq = RandomScheduler(cat, topo, seed=11)
+    broker = JaxRandomBroker(cat, topo, seq.rng)   # one shared stream
+    jobs = generate_jobs(cfg, 8)
+    for s in topo.sites:
+        s.online = False
+    state = seq.rng.getstate()
+    with pytest.raises(IndexError):
+        seq.select_site(jobs[0])
+    with pytest.raises(IndexError):
+        broker.select_batch([j.required for j in jobs])
+    assert seq.rng.getstate() == state            # no draw consumed
+    for s in topo.sites[:3]:
+        s.online = True                            # partial recovery
+    twin = RandomScheduler(cat, topo, seed=11)     # fresh aligned stream
+    want = [twin.select_site(j) for j in jobs]
+    assert broker.select_batch([j.required for j in jobs]) == want
+
+
+def test_jax_brokers_all_offline_raise_like_sequential():
+    """Batch dispatch against an all-offline snapshot must not silently
+    land on site 0 (the old argmin-over-inf bug): every deterministic jax
+    broker raises the same ValueError its sequential policy does."""
+    from repro.core import GridSimulator, build_catalog, build_topology
+    from repro.core.scheduler import Job, make_scheduler
+    cfg = GridConfig(n_regions=2, sites_per_region=3)
+    for scheduler in ("dataaware", "leastloaded", "shortesttransfer"):
+        topo = build_topology(cfg)
+        cat = build_catalog(cfg, topo)
+        sim = GridSimulator(topo, cat, scheduler=scheduler, strategy="hrs",
+                            broker="jax")
+        for s in topo.sites:
+            s.online = False
+        job_files = [["lfn0000", "lfn0001"]] * 4
+        with pytest.raises(ValueError):
+            make_scheduler(scheduler, cat, topo).select_site(
+                Job(0, 0, job_files[0], 1.0))
+        with pytest.raises(ValueError):
+            sim._jax_broker.select_batch(job_files)
+
+
+def test_late_registered_files_visible_to_batch_dispatch():
+    """Regression (stale-snapshot bug): lfns/sizes/presence were frozen at
+    broker construction, so files registered afterwards were invisible to
+    batch dispatch. The lazy re-sync must pick them up."""
+    from repro.core.jaxsched import JaxScheduler
+    _, topo, cat = _snapshot_world()
+    broker = JaxScheduler(cat, topo)
+    cat.register_file("zzz-new", 7e9, master_site=6)
+    # the new file's only copy is at site 6, which must now win the
+    # dataaware argmax for a job that requires nothing else
+    assert broker.select_batch([["zzz-new"]] * 3 + [["lfn0000"]])[:3] == [6] * 3
+    assert broker._sizes_np[broker.lfn_index["zzz-new"]] == 7e9
+
+
+def test_catalog_listeners_are_weak():
+    """A broker that goes out of scope is collected, not notified forever:
+    the catalog holds listeners by weak reference only."""
+    import gc
+
+    from repro.core.jaxsched import JaxScheduler
+    _, topo, cat = _snapshot_world()
+    broker = JaxScheduler(cat, topo)
+    broker.presence_np()
+    ref = cat._listeners[-1]
+    del broker
+    gc.collect()
+    assert ref() is None
+    cat.add_replica("lfn0000", 3)       # dead listener must not blow up
+    keeper = JaxScheduler(cat, topo)    # registering prunes dead refs
+    assert all(r() is not None for r in cat._listeners)
+    assert cat._listeners[-1]() is keeper
+
+
+def test_presence_bitmap_tracks_catalog_incrementally():
+    """The listener-maintained bitmap equals a fresh catalog scan after a
+    full simulated run of replications, evictions and churn-driven
+    replica losses (site_churn at small scale)."""
+    import numpy as np
+
+    from repro.core import GridSimulator, build_catalog, build_topology, \
+        generate_jobs
+    cfg = GridConfig(n_regions=2, sites_per_region=4,
+                     storage_capacity=3e9)           # force evictions
+    topo = build_topology(cfg)
+    cat = build_catalog(cfg, topo)
+    sim = GridSimulator(topo, cat, strategy="hrs", broker="jax")
+    for info in cat.files.values():
+        sim.storage.bootstrap(info.master_site, info.lfn)
+    for j, job in enumerate(generate_jobs(cfg, 60)):
+        sim.submit_job(job, at=(j // 5) * 60.0)
+    sim.inject_failure(3, 500.0, 2000.0)
+    sim.run()
+    broker = sim._jax_broker
+    got = broker.presence_np()
+    want = np.zeros_like(got)
+    for j, lfn in enumerate(broker.lfns):
+        for h in cat.holders(lfn):
+            want[h, j] = True
+    assert np.array_equal(got, want)
+
+
 @pytest.mark.slow
 def test_batch_broker_2k_job_smoke():
     """2k jobs in bursts of 50 through the jitted batch dispatcher."""

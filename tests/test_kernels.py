@@ -11,6 +11,7 @@ from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.net_rerate import net_rerate, net_rerate_ref
 from repro.kernels.selective_scan.kernel import selective_scan_kernel
 from repro.kernels.selective_scan.ref import selective_scan_ref
+from repro.kernels.st_cost import st_cost, st_cost_dense_ref, st_cost_ref
 from repro.kernels.value_score import value_score, value_score_ref
 
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
@@ -210,6 +211,133 @@ def test_value_score_empty_and_errors():
     with pytest.raises(ValueError, match="backend"):
         value_score(np.zeros((1, 1)), np.ones(1), np.ones((1, 1), bool),
                     np.ones((1, 1)), backend="cuda")
+
+
+def _st_cost_case(seed, sites, files, jobs):
+    """Random but realistic broker-batch inputs: sparse holders, some
+    offline sites, durable-master fetchability, LAN/WAN-range bandwidths,
+    12-ish-file requirement rows."""
+    rng = np.random.default_rng(seed)
+    bw = rng.random((sites, sites)) * 1.25e8 + 1e5
+    presence = rng.random((sites, files)) < 0.2
+    presence[0, :] = True                       # every file has a holder row
+    online = rng.random(sites) < 0.85
+    online[0] = True
+    fetch_mask = presence & online[:, None]
+    fetch_mask[0, :] = presence[0, :]           # site 0 plays durable master
+    sizes = rng.random(files) * 1e9 + 1e6
+    required = rng.random((jobs, files)) < min(0.5, 12.0 / files)
+    rel = rng.random(sites) * 50.0
+    return bw, fetch_mask, presence, sizes, required, rel, online
+
+
+@pytest.mark.parametrize("seed,sites,files,jobs", [
+    (0, 4, 8, 3),            # tiny (heavy sublane/lane padding)
+    (1, 13, 100, 17),        # one paper region x the paper catalog
+    (2, 52, 100, 50),        # the full paper grid x a bulk burst
+    (3, 37, 260, 9),         # ragged on every axis
+])
+def test_st_cost_interpret_matches_oracle(seed, sites, files, jobs):
+    """The blocked st-cost kernel under x64 interpret mode is
+    *bit-identical* to the float64 oracle: the holder max is
+    order-independent, max/divide are exact IEEE ops, and the file sum
+    runs sequentially over ascending file index in both."""
+    case = _st_cost_case(seed, sites, files, jobs)
+    ref = st_cost_ref(*case)
+    out = st_cost(*case, backend="interpret")
+    assert np.array_equal(out, ref)
+
+
+@pytest.mark.parametrize("seed,sites,files,jobs", [
+    (0, 4, 8, 3), (2, 52, 100, 50), (3, 37, 260, 9),
+])
+def test_st_cost_blocked_matches_dense(seed, sites, files, jobs):
+    """The blocked pass equals the pre-blocked dense reduction (the
+    ``(sites, files, sites)`` broadcast the old broker materialized) bit
+    for bit — skipping exact-zero terms of a nonnegative running sum and
+    reordering an exact max change nothing."""
+    case = _st_cost_case(seed, sites, files, jobs)
+    assert np.array_equal(st_cost_ref(*case), st_cost_dense_ref(*case))
+
+
+def test_st_cost_auto_backend_on_cpu_is_exact():
+    """backend='auto' off-TPU routes to the float64 oracle — the fast
+    path the jitted shortesttransfer broker uses per dispatch batch."""
+    case = _st_cost_case(7, 8, 24, 5)
+    assert np.array_equal(st_cost(*case, backend="auto"),
+                          st_cost_ref(*case))
+
+
+def test_st_cost_guards_and_edges():
+    """Zero-bandwidth guard (missing file with no fetchable source costs
+    inf), offline sites cost inf, empty batches and empty catalogs work."""
+    bw = np.array([[5.0, 5.0], [5.0, 5.0]])
+    presence = np.array([[True], [False]])
+    fetch = np.zeros((2, 1), bool)              # nothing fetchable at all
+    sizes = np.array([10.0])
+    required = np.array([[True]])
+    rel = np.array([0.25, 0.5])
+    online = np.array([True, False])
+    out = st_cost_ref(bw, fetch, presence, sizes, required, rel, online)
+    assert out[0, 0] == 0.25                    # present locally: queue only
+    assert out[0, 1] == np.inf                  # offline
+    fetch = np.array([[True], [False]])
+    out = st_cost_ref(bw, fetch, presence, sizes, required, rel,
+                      np.array([True, True]))
+    assert out[0, 1] == max(10.0 / 5.0, 0.5)    # fetched from site 0
+    assert st_cost_ref(bw, fetch, presence, sizes,
+                       np.zeros((0, 1), bool), rel,
+                       online).shape == (0, 2)
+    empty_args = (bw, np.zeros((2, 0), bool), np.zeros((2, 0), bool),
+                  np.zeros(0), np.zeros((3, 0), bool), rel,
+                  np.array([True, False]))
+    empty = st_cost_ref(*empty_args)
+    assert np.array_equal(empty, [[0.25, np.inf]] * 3)  # queue time only
+    # the kernel route must survive a 0-wide file axis too (empty batch
+    # union / empty catalog), bit-identically
+    assert np.array_equal(st_cost(*empty_args, backend="interpret"), empty)
+    with pytest.raises(ValueError, match="backend"):
+        st_cost(bw, fetch, presence, sizes, required, rel, online,
+                backend="cuda")
+
+
+def _collect_avals(jaxpr, out):
+    for eqn in jaxpr.eqns:
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "shape"):
+                out.append(aval)
+        for p in eqn.params.values():
+            for sub in (p if isinstance(p, (list, tuple)) else [p]):
+                inner = getattr(sub, "jaxpr", None)
+                if inner is not None:
+                    _collect_avals(inner, out)
+                elif hasattr(sub, "eqns"):
+                    _collect_avals(sub, out)
+    return out
+
+
+def test_st_cost_kernel_never_materializes_rank3():
+    """Shape guard on the blocked path: abstract evaluation of the whole
+    kernel call (padding, pallas_call body, fori loops) must contain no
+    rank-3 intermediate — the ``(sites, files, sites)`` /
+    ``(jobs, files, sites)`` broadcasts are exactly what this kernel
+    exists to avoid — and no buffer larger than the padded 2-D planes."""
+    from repro.kernels.st_cost.kernel import st_cost_kernel
+    sites, files, jobs = 52, 100, 50
+    case = _st_cost_case(2, sites, files, jobs)
+    bw, fetch_mask, presence, sizes, required, rel, online = [
+        np.asarray(a, np.float32) for a in case]
+    jaxpr = jax.make_jaxpr(
+        lambda *a: st_cost_kernel(*a, interpret=True))(
+            bw, fetch_mask, presence, sizes, required, rel, online)
+    avals = _collect_avals(jaxpr.jaxpr, [])
+    assert avals, "no intermediates collected — walker is broken"
+    pad = 128
+    plane = max((sites + pad) * (files + pad), (jobs + pad) * (sites + pad))
+    for aval in avals:
+        assert len(aval.shape) <= 2, f"rank-3 intermediate: {aval}"
+        assert int(np.prod(aval.shape, dtype=np.int64)) <= plane, aval
 
 
 def test_selective_scan_streaming_equivalence():

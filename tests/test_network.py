@@ -212,6 +212,53 @@ def test_deep_tree_full_path_diverges_from_topmost():
     assert full.avg_job_time != legacy.avg_job_time
 
 
+@pytest.mark.parametrize("fanouts,uplinks,path_model", [
+    ((4, 13), (10.0,), "full"),
+    ((2, 4, 7), (10.0, 100.0), "full"),
+    ((2, 3, 3, 3), (10.0, 50.0, 200.0), "full"),
+    ((2, 3, 3, 3), (10.0, 50.0, 200.0), "topmost"),
+])
+def test_pair_link_matrix_matches_link_ids_for(fanouts, uplinks, path_model):
+    """The vectorized (sites, sites, depth) tensor equals the per-pair
+    link_ids_for rows: NIC first, same crossed-uplink id set (hole
+    positions within a row carry no meaning — consumers mask on >= 0)."""
+    topo = _topo(fanouts, uplinks, path_model=path_model)
+    mat = topo.pair_link_matrix()
+    assert mat.shape == (topo.n_sites, topo.n_sites, topo.depth)
+    for h in range(topo.n_sites):
+        for s in range(topo.n_sites):
+            row = mat[h, s]
+            assert row[0] == h                           # source NIC
+            assert sorted(int(x) for x in row if x >= 0) == \
+                sorted(topo.link_ids_for(h, s))
+
+
+def test_point_bandwidth_matrix_is_the_shared_snapshot():
+    """One cached path tensor serves both consumers: the jitted
+    shortest-transfer broker and the replication economy read the same
+    NetworkEngine.point_bandwidth_matrix, and its cell values equal the
+    scalar point_bandwidth query."""
+    import numpy as np
+
+    from repro.core import GridSimulator, build_catalog, build_topology
+    cfg = GridConfig(n_regions=2, sites_per_region=3)
+    topo = build_topology(cfg)
+    cat = build_catalog(cfg, topo)
+    sim = GridSimulator(topo, cat, scheduler="shortesttransfer",
+                        strategy="hrs", broker="jax")
+    for info in cat.files.values():
+        sim.storage.bootstrap(info.master_site, info.lfn)
+    assert sim.network._pair_paths is None          # lazy until first use
+    sim._jax_broker.select_batch([["lfn0000"], ["lfn0001"]])
+    cached = sim.network._pair_paths
+    assert cached is not None                       # broker went through it
+    B = sim.network.point_bandwidth_matrix()
+    assert sim.network._pair_paths is cached        # built exactly once
+    for h, s in ((0, 0), (0, 5), (4, 1), (5, 2)):
+        assert B[h, s] == sim.network.point_bandwidth(h, s)
+    assert np.array_equal(cached, topo.pair_link_matrix())
+
+
 # -- the vectorized shortest-transfer broker --------------------------------
 def test_jax_shortest_transfer_matches_python():
     """Batch decisions over a frozen snapshot must equal the sequential

@@ -20,7 +20,7 @@ def test_registry_completeness():
     # the regimes the scenario engine exists to cover
     for name in ("paper_baseline", "deep_4tier", "deep_5tier", "fat_region",
                  "flash_crowd", "diurnal", "bulk_diana", "site_churn",
-                 "cache_starved"):
+                 "cache_starved", "grid_500"):
         assert name in SCENARIOS, name
     for name, spec in SCENARIOS.items():
         assert spec.name == name
@@ -48,6 +48,18 @@ def test_every_strategy_runs_paper_baseline(strategy):
                                strategy=strategy)
     r = run_spec(spec, n_jobs=50)
     assert r.completed_jobs == r.n_jobs == 50
+    assert r.avg_job_time > 0 and r.makespan > 0
+
+
+def test_grid_500_smoke():
+    """The 500-site scale scenario runs end to end at a reduced job count
+    through the jitted batch broker (incremental presence bitmap + shared
+    network snapshot hot paths)."""
+    from repro.launch.experiments import run_spec
+    spec = SCENARIOS["grid_500"]
+    assert spec.n_sites == 500 and spec.n_jobs == 100_000
+    r = run_spec(spec, n_jobs=200)
+    assert r.completed_jobs == 200
     assert r.avg_job_time > 0 and r.makespan > 0
 
 
