@@ -1,0 +1,120 @@
+"""repro.analysis — static analysis for the simulation codebase.
+
+Three passes over ``src/repro/`` (see ``docs/ANALYSIS.md`` for the rule
+catalog and suppression syntax):
+
+* **simlint** (:mod:`repro.analysis.simlint`) — AST determinism linter:
+  hash-ordered iteration in mutation paths, unseeded/global randomness,
+  wall-clock reads in sim-state code, float reductions over unordered
+  containers, ``id()``/``hash()`` tie-breaks, heap pushes without the
+  ``(time, seq)`` tie key.
+* **coherence** (:mod:`repro.analysis.coherence`) — snapshot-coherence
+  rules: every replica-table mutation flows through the
+  listener-notifying :class:`~repro.core.catalog.ReplicaCatalog` API, and
+  every public read of engine-shared snapshot state calls ``sync()``
+  first.
+* **jaxpr audit** (:mod:`repro.analysis.jaxpr_audit`) — traces every
+  registered kernel (:func:`repro.kernels.registered_kernels`) and checks
+  rank ceilings, dtype discipline, host-callback freedom and per-equation
+  intermediate-size budgets. Requires jax; the CLI auto-skips it when jax
+  is unavailable.
+
+Run as ``python -m repro.analysis`` (see ``--help``); CI gates on
+``--fail-on-findings``.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+from .coherence import lint_coherence
+from .findings import Baseline, Finding, inline_suppressions, is_inline_suppressed
+from .simlint import lint_source
+
+__all__ = [
+    "Baseline", "Finding", "RULES", "analyze_file", "collect_files",
+    "default_target", "run_analysis",
+]
+
+#: Rule catalog: id -> one-line description (``--list-rules``).
+RULES: dict[str, str] = {
+    "SL001": "iteration over a set/frozenset (hash order) outside an "
+             "order-free consumer such as sorted()/any()/len()",
+    "SL002": "global or unseeded PRNG use (random module, np.random.*) "
+             "instead of a seeded Generator",
+    "SL003": "float reduction (sum/math.fsum) over an unordered container "
+             "— result depends on hash order",
+    "SL004": "id()/hash() used in a sort key — ties break on memory "
+             "layout, not data",
+    "SL005": "wall-clock read (time.time/perf_counter/...) in sim-state "
+             "code (repro/core/, repro/grid/)",
+    "SL010": "heapq.heappush of an event tuple whose second element is "
+             "not the monotonic seq tie-breaker",
+    "SL011": "ReplicaCatalog._holders touched outside catalog.py, or "
+             "mutated inside it without _notify",
+    "SL012": "public method reads sync()-maintained snapshot state "
+             "without calling sync() first",
+}
+
+#: Files skipped entirely (the linter's own test fixtures would flag).
+_SKIP_PARTS = ("__pycache__",)
+
+
+def default_target() -> Path:
+    """The in-repo ``src/repro`` tree this package ships in."""
+    return Path(__file__).resolve().parents[1]
+
+
+def collect_files(paths: list[Path] | None = None) -> list[Path]:
+    """Expand ``paths`` (files or directories; default the repro package)
+    into a sorted list of ``.py`` files."""
+    roots = paths or [default_target()]
+    out: set[Path] = set()
+    for root in roots:
+        root = Path(root)
+        if root.is_file():
+            out.add(root.resolve())
+        else:
+            for p in root.rglob("*.py"):
+                if not any(part in _SKIP_PARTS for part in p.parts):
+                    out.add(p.resolve())
+    return sorted(out)
+
+
+def _rel_path(path: Path) -> str:
+    """Path as reported in findings: relative to the repo root when the
+    file lives under it (stable fingerprints), absolute otherwise."""
+    repo_root = default_target().parents[1]
+    try:
+        return path.resolve().relative_to(repo_root).as_posix()
+    except ValueError:
+        return path.as_posix()
+
+
+def analyze_file(path: Path) -> tuple[list[Finding], int]:
+    """Run both static passes on one file. Returns ``(findings,
+    n_inline_suppressed)`` — inline ``# simlint: disable`` comments are
+    applied here, baseline filtering is the caller's job."""
+    source = path.read_text()
+    rel = _rel_path(path)
+    raw = lint_source(source, rel) + lint_coherence(source, rel)
+    suppressions = inline_suppressions(source)
+    findings = [f for f in raw if not is_inline_suppressed(f, suppressions)]
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule)), \
+        len(raw) - len(findings)
+
+
+def run_analysis(paths: list[Path] | None = None,
+                 baseline: Baseline | None = None,
+                 ) -> tuple[list[Finding], list[Finding], int]:
+    """Run the static passes over ``paths``. Returns
+    ``(new_findings, baselined_findings, n_inline_suppressed)``."""
+    new: list[Finding] = []
+    old: list[Finding] = []
+    inline = 0
+    for path in collect_files(paths):
+        findings, n_inline = analyze_file(path)
+        inline += n_inline
+        for f in findings:
+            (old if baseline is not None and f in baseline else new).append(f)
+    return new, old, inline

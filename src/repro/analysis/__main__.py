@@ -1,0 +1,127 @@
+"""CLI for ``python -m repro.analysis``.
+
+Default run: both static passes (simlint + coherence) over ``src/repro``
+plus the jaxpr kernel audit when jax is importable. ``--fail-on-findings``
+makes any unsuppressed finding (or audit failure) exit non-zero — this is
+what CI gates on.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from . import RULES, Baseline, default_target, run_analysis
+
+DEFAULT_BASELINE = "analysis_baseline.json"
+DEFAULT_KERNELS_JSON = "results/ANALYSIS_kernels.json"
+
+
+def _jax_available() -> bool:
+    try:
+        import jax  # noqa: F401
+    except Exception:
+        return False
+    return True
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Determinism / kernel-invariant / snapshot-coherence "
+                    "static analysis for the repro codebase.")
+    parser.add_argument("paths", nargs="*", type=Path,
+                        help="files or directories to lint "
+                             "(default: the installed repro package)")
+    parser.add_argument("--fail-on-findings", action="store_true",
+                        help="exit 1 if any unsuppressed finding or audit "
+                             "failure remains (CI gate)")
+    parser.add_argument("--baseline", type=Path, default=None,
+                        help=f"baseline JSON (default: {DEFAULT_BASELINE} "
+                             "next to the lint root, if present)")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="write current findings to the baseline file "
+                             "and exit 0")
+    jaxpr = parser.add_mutually_exclusive_group()
+    jaxpr.add_argument("--jaxpr", dest="jaxpr", action="store_true",
+                       default=None, help="force the jaxpr kernel audit "
+                       "(error if jax is missing)")
+    jaxpr.add_argument("--no-jaxpr", dest="jaxpr", action="store_false",
+                       help="skip the jaxpr kernel audit")
+    jaxpr.add_argument("--jaxpr-only", action="store_true",
+                       help="run only the jaxpr kernel audit")
+    parser.add_argument("--kernels-json", type=Path,
+                        default=Path(DEFAULT_KERNELS_JSON),
+                        help="where the jaxpr audit report is written "
+                             f"(default: {DEFAULT_KERNELS_JSON})")
+    parser.add_argument("--tierace", action="store_true",
+                        help="also run the dynamic tie-race sanitizer "
+                             "smoke scenario and print its report")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule catalog and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule, desc in sorted(RULES.items()):
+            print(f"{rule}  {desc}")
+        return 0
+
+    failed = False
+
+    # -- static passes -----------------------------------------------------
+    if not args.jaxpr_only:
+        baseline_path = args.baseline
+        if baseline_path is None:
+            candidate = default_target() / DEFAULT_BASELINE
+            baseline_path = candidate if candidate.exists() else None
+        baseline = Baseline.load(baseline_path)
+        new, old, inline = run_analysis(args.paths or None, baseline)
+
+        if args.write_baseline:
+            target = args.baseline or default_target() / DEFAULT_BASELINE
+            Baseline().write(target, new + old)
+            print(f"wrote {len(new) + len(old)} fingerprints to {target}")
+            return 0
+
+        for finding in new:
+            print(finding.render())
+        print(f"simlint: {len(new)} finding(s), {len(old)} baselined, "
+              f"{inline} inline-suppressed")
+        failed |= bool(new)
+
+    # -- jaxpr kernel audit ------------------------------------------------
+    run_jaxpr = args.jaxpr_only or args.jaxpr
+    if run_jaxpr is None:  # auto-detect
+        run_jaxpr = _jax_available()
+        if not run_jaxpr:
+            print("jaxpr audit: skipped (jax not importable; "
+                  "use --jaxpr to force)")
+    if run_jaxpr:
+        if not _jax_available():
+            print("jaxpr audit: jax requested but not importable",
+                  file=sys.stderr)
+            return 2
+        from .jaxpr_audit import run_jaxpr_audit
+        report, failures = run_jaxpr_audit(args.kernels_json)
+        for line in failures:
+            print(f"jaxpr audit: FAIL {line}")
+        print(f"jaxpr audit: {len(report['kernels'])} kernel(s), "
+              f"{len(failures)} failure(s) -> {args.kernels_json}")
+        failed |= bool(failures)
+
+    # -- dynamic tie-race smoke --------------------------------------------
+    if args.tierace:
+        from .tierace import sanitize_smoke
+        rep = sanitize_smoke()
+        print(f"tie-race smoke: {rep['ties_seen']} tie instant(s) "
+              f"replayed, {len(rep['tie_races'])} order-dependent")
+        for race in rep["tie_races"]:
+            kinds = ",".join(sorted(set(race["kinds"])))
+            print(f"  t={race['time']:.1f} [{kinds}] {race['detail']}")
+
+    return 1 if (failed and args.fail_on_findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

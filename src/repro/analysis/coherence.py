@@ -1,0 +1,260 @@
+"""Snapshot-coherence rules (the PR 5 frozen-lfns bug class).
+
+The engine keeps several derived snapshots of the replica catalog —
+incremental presence bitmaps in the jax brokers, decayed access counts
+in :class:`repro.core.access.AccessHistory` — maintained by catalog
+listeners plus a lazy ``sync()`` that re-bases the file axis when files
+were registered after construction. Two invariants make that safe, and
+PR 5 shipped a bug (stale ``lfns`` axis read without ``sync()``) that
+motivates checking them statically:
+
+* **SL011 — catalog mutations go through the listener-notifying API.**
+  Outside ``repro/core/catalog.py`` nobody touches the private
+  ``_holders`` replica map: reads go through ``holders()`` /
+  ``fetchable_holders()``, writes through ``register_file()`` /
+  ``add_replica()`` / ``remove_replica()`` (which fire ``_notify``).
+  Inside ``catalog.py``, every method that mutates ``_holders`` must
+  call ``_notify`` in the same method body.
+
+* **SL012 — snapshot consumers call sync() before reads.** In any class
+  defining a ``sync()`` method, the attributes ``sync()`` reassigns are
+  the *synced snapshot state*. Every public method (not ``sync``
+  itself, not ``on_*`` listener callbacks, not ``_``-private helpers)
+  that reads one of those attributes must be *synced*: it calls
+  ``.sync()`` directly, or calls a same-class method that is synced
+  (transitively). Listener callbacks are exempt because they are the
+  incremental maintainers; private helpers are exempt because their
+  public callers carry the obligation.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .findings import Finding
+
+CATALOG_OWNER_PATH = "repro/core/catalog.py"
+PRIVATE_REPLICA_MAP = "_holders"
+LISTENER_PREFIX = "on_"
+
+
+def _flag(findings: list[Finding], rule: str, path: str, lines: list[str],
+          node: ast.AST, message: str) -> None:
+    line = getattr(node, "lineno", 1)
+    snippet = lines[line - 1].strip() if 0 < line <= len(lines) else ""
+    findings.append(Finding(rule=rule, path=path, line=line,
+                            message=message, snippet=snippet))
+
+
+# ---------------------------------------------------------------------------
+# SL011
+# ---------------------------------------------------------------------------
+
+
+def _mutates_holders(node: ast.AST) -> bool:
+    """Does this statement mutate an element of ``self._holders``?"""
+    for sub in ast.walk(node):
+        # self._holders[lfn] = ... / del self._holders[lfn]
+        if isinstance(sub, (ast.Assign, ast.Delete)):
+            targets = sub.targets
+            for t in targets:
+                if (isinstance(t, ast.Subscript)
+                        and isinstance(t.value, ast.Attribute)
+                        and t.value.attr == PRIVATE_REPLICA_MAP):
+                    return True
+        # self._holders[lfn].add(...) / .discard(...) / .pop(...)
+        if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Attribute):
+            recv = sub.func.value
+            if sub.func.attr in ("add", "discard", "remove", "pop", "clear",
+                                 "update", "setdefault"):
+                for part in ast.walk(recv):
+                    if (isinstance(part, ast.Attribute)
+                            and part.attr == PRIVATE_REPLICA_MAP):
+                        return True
+    return False
+
+
+def check_catalog_bypass(tree: ast.Module, path: str,
+                         source: str) -> list[Finding]:
+    """SL011: private replica-map access outside the catalog module, and
+    notify-less mutations inside it."""
+    findings: list[Finding] = []
+    lines = source.splitlines()
+    inside_catalog = path.endswith(CATALOG_OWNER_PATH) or \
+        path == CATALOG_OWNER_PATH
+
+    if not inside_catalog:
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Attribute)
+                    and node.attr == PRIVATE_REPLICA_MAP):
+                _flag(findings, "SL011", path, lines, node,
+                      "direct access to ReplicaCatalog._holders bypasses "
+                      "the listener-notifying API; use holders()/"
+                      "add_replica()/remove_replica()")
+        return findings
+
+    # inside catalog.py: mutating methods must notify listeners
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if node.name == "__init__" or not _mutates_holders(node):
+            continue
+        notifies = any(
+            isinstance(sub, ast.Call)
+            and isinstance(sub.func, ast.Attribute)
+            and sub.func.attr == "_notify"
+            for sub in ast.walk(node))
+        if not notifies:
+            _flag(findings, "SL011", path, lines, node,
+                  f"catalog method {node.name}() mutates _holders without "
+                  "firing _notify — listener snapshots (presence bitmaps, "
+                  "access axes) go stale")
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# SL012
+# ---------------------------------------------------------------------------
+
+
+def _self_attr_stores(fn: ast.AST) -> set[str]:
+    """Names X for every ``self.X = ...`` in the function body."""
+    out: set[str] = set()
+    for sub in ast.walk(fn):
+        targets = []
+        if isinstance(sub, ast.Assign):
+            targets = sub.targets
+        elif isinstance(sub, (ast.AnnAssign, ast.AugAssign)):
+            targets = [sub.target]
+        for t in targets:
+            if (isinstance(t, ast.Attribute)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id == "self"):
+                out.add(t.attr)
+    return out
+
+
+def _self_attr_reads(fn: ast.AST) -> dict[str, ast.Attribute]:
+    """Names X (with a representative node) for ``self.X`` reads."""
+    out: dict[str, ast.Attribute] = {}
+    for sub in ast.walk(fn):
+        if (isinstance(sub, ast.Attribute)
+                and isinstance(sub.value, ast.Name)
+                and sub.value.id == "self"
+                and not isinstance(sub.ctx, ast.Store)):
+            out.setdefault(sub.attr, sub)
+    # AugAssign targets read too (self.x += 1) but are ctx=Store; catch them
+    for sub in ast.walk(fn):
+        if isinstance(sub, ast.AugAssign) and isinstance(
+                sub.target, ast.Attribute) \
+                and isinstance(sub.target.value, ast.Name) \
+                and sub.target.value.id == "self":
+            out.setdefault(sub.target.attr, sub.target)
+    return out
+
+
+def _self_calls(fn: ast.AST) -> set[str]:
+    """Names of same-instance method calls (``self.m(...)``)."""
+    out: set[str] = set()
+    for sub in ast.walk(fn):
+        if (isinstance(sub, ast.Call)
+                and isinstance(sub.func, ast.Attribute)
+                and isinstance(sub.func.value, ast.Name)
+                and sub.func.value.id == "self"):
+            out.add(sub.func.attr)
+    return out
+
+
+def _calls_any_sync(fn: ast.AST) -> bool:
+    """Does the body call a ``sync()`` method on anything?"""
+    return any(
+        isinstance(sub, ast.Call) and isinstance(sub.func, ast.Attribute)
+        and sub.func.attr == "sync"
+        for sub in ast.walk(fn))
+
+
+def _class_methods(cls: ast.ClassDef) -> dict[str, ast.FunctionDef]:
+    return {n.name: n for n in cls.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def check_sync_coherence(tree: ast.Module, path: str,
+                         source: str) -> list[Finding]:
+    """SL012: public snapshot readers must be synced (see module doc)."""
+    findings: list[Finding] = []
+    lines = source.splitlines()
+    classes = {n.name: n for n in ast.walk(tree)
+               if isinstance(n, ast.ClassDef)}
+
+    for cls in classes.values():
+        methods = _class_methods(cls)
+        own = set(methods)     # report on methods *defined* here only, so
+        #                        subclasses don't re-report inherited ones
+        # resolve single-inheritance sync() from same-module bases
+        sync_fn = methods.get("sync")
+        seen = {cls.name}
+        base_cls = cls
+        while sync_fn is None:
+            base_names = [b.id for b in base_cls.bases
+                          if isinstance(b, ast.Name)]
+            base_cls = next((classes[b] for b in base_names
+                             if b in classes and b not in seen), None)
+            if base_cls is None:
+                break
+            seen.add(base_cls.name)
+            methods = {**_class_methods(base_cls), **methods}
+            sync_fn = _class_methods(base_cls).get("sync")
+        if sync_fn is None:
+            continue
+
+        # synced attrs: assigned in sync() or in same-class methods sync()
+        # calls (transitively — sync may delegate to _resync helpers)
+        synced_attrs: set[str] = set()
+        frontier = ["sync"]
+        visited: set[str] = set()
+        while frontier:
+            name = frontier.pop()
+            if name in visited or name not in methods:
+                continue
+            visited.add(name)
+            synced_attrs |= _self_attr_stores(methods[name])
+            frontier.extend(sorted(_self_calls(methods[name])))
+
+        # methods that are synced: call .sync() directly, or call a synced
+        # same-class method (fixed point)
+        synced_methods = {name for name, fn in methods.items()
+                          if _calls_any_sync(fn)}
+        changed = True
+        while changed:
+            changed = False
+            for name, fn in methods.items():
+                if name in synced_methods:
+                    continue
+                if _self_calls(fn) & synced_methods:
+                    synced_methods.add(name)
+                    changed = True
+
+        for name, fn in sorted(methods.items()):
+            if name not in own:
+                continue
+            if (name == "sync" or name.startswith("_")
+                    or name.startswith(LISTENER_PREFIX)):
+                continue
+            if name in synced_methods:
+                continue
+            reads = _self_attr_reads(fn)
+            stale = sorted(set(reads) & synced_attrs)
+            if stale:
+                _flag(findings, "SL012", path, lines, reads[stale[0]],
+                      f"{cls.name}.{name}() reads synced snapshot state "
+                      f"({', '.join(stale)}) without calling sync() — "
+                      "stale file axis after late register_file()")
+    return findings
+
+
+def lint_coherence(source: str, path: str) -> list[Finding]:
+    """Run both coherence rules over one file."""
+    tree = ast.parse(source, filename=path)
+    findings = check_catalog_bypass(tree, path, source)
+    findings += check_sync_coherence(tree, path, source)
+    return sorted(findings, key=lambda f: (f.line, f.rule))

@@ -177,6 +177,7 @@ class AccessHistory:
         """The full decayed ``(n_sites, n_files)`` count matrix at ``now``
         (default: the latest recorded time). Normalizes in place — stamps
         all move to ``now`` — and returns a copy."""
+        self.sync()     # no-op unless files were registered late
         now = self.last_now if now is None else now
         dt = now - self.stamps
         np.multiply(self.counts, 2.0 ** (-np.maximum(dt, 0.0) / self.half_life_s),
@@ -186,6 +187,7 @@ class AccessHistory:
 
     def site_counts(self, site: int, now: float | None = None) -> np.ndarray:
         """Decayed counts for one site, ``(n_files,)``."""
+        self.sync()     # no-op unless files were registered late
         now = self.last_now if now is None else now
         dt = np.maximum(now - self.stamps[site], 0.0)
         return self.counts[site] * 2.0 ** (-dt / self.half_life_s)

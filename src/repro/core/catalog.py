@@ -33,6 +33,19 @@ class ReplicaCatalog:
         self._holders: dict[str, set[int]] = {}
         self._listeners: list[weakref.ref] = []
 
+    def __deepcopy__(self, memo: dict) -> "ReplicaCatalog":
+        """Deep copy *without* listeners. Listeners are per-instance
+        mirrors of per-instance engine state (presence bitmaps); a copied
+        catalog (the tie-race sanitizer's twin engine) must never notify
+        the original's mirrors. weakref.ref is also deep-copied atomically
+        by the stdlib, so keeping the list would alias the originals."""
+        clone = self.__class__.__new__(self.__class__)
+        memo[id(self)] = clone
+        clone.files = dict(self.files)          # FileInfo is frozen
+        clone._holders = {lfn: set(h) for lfn, h in self._holders.items()}
+        clone._listeners = []
+        return clone
+
     # -- change listeners ---------------------------------------------------
     def add_listener(self, listener: object) -> None:
         """Subscribe ``listener`` to holder-table changes. It must provide

@@ -189,7 +189,7 @@ class ReplicationOptimizer:
         n_sites = self.topology.n_sites
         held = np.zeros((n_sites, len(self.lfns)), bool)
         for j, lfn in enumerate(self.lfns):
-            for h in self.catalog.holders(lfn):
+            for h in sorted(self.catalog.holders(lfn)):
                 held[h, j] = True
         online = np.array([s.online for s in self.topology.sites], bool)
         fetchable = held & online[:, None]

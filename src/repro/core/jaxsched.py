@@ -150,7 +150,7 @@ class JaxScheduler:
     def _fill_column(self, presence: np.ndarray, j: int, lfn: str) -> None:
         """One file's presence column from the catalog's holder set — the
         single definition of what a bitmap cell means."""
-        for h in self.catalog.holders(lfn):
+        for h in sorted(self.catalog.holders(lfn)):
             presence[h, j] = True
 
     # -- host-side snapshot pieces (shared by all brokers) -----------------
@@ -159,6 +159,7 @@ class JaxScheduler:
 
         The *live* incrementally-maintained array — treat it as
         read-only; copy before masking (``presence & ...`` does)."""
+        self.sync()     # no-op unless files were registered late
         if self._presence is None:
             presence = np.zeros((self.topology.n_sites, len(self.lfns)), bool)
             for j, lfn in enumerate(self.lfns):
@@ -175,6 +176,7 @@ class JaxScheduler:
 
     def required_np(self, required_sets: list[list[str]]) -> np.ndarray:
         """bool[n_jobs, n_files] requirement masks (R_j rows)."""
+        self.sync()     # no-op unless files were registered late
         m = np.zeros((len(required_sets), len(self.lfns)), dtype=bool)
         for i, req in enumerate(required_sets):
             for lfn in req:

@@ -82,7 +82,13 @@ class NetworkEngine:
         self._link_objs = list(topology.nic_links) + list(topology.wan_links)
         self.link_bw = np.array([l.bandwidth for l in self._link_objs])
         self.link_act = np.array([float(l.active) for l in self._link_objs])
-        self.members: list[set[int]] = [set() for _ in range(self.n_links)]
+        # per-link member slots as insertion-ordered dicts (value unused):
+        # O(1) add/remove like a set, but iteration order is allocation
+        # order, not hash order — simlint SL001 bans iterating raw sets in
+        # engine paths (rates are order-independent anyway; this keeps the
+        # re-rate batch order reproducible by construction)
+        self.members: list[dict[int, None]] = [
+            {} for _ in range(self.n_links)]
         self.max_links = topology.depth        # NIC + up to depth-1 uplinks
         self.cap = 64
         self.rem = np.zeros(self.cap)
@@ -120,7 +126,7 @@ class NetworkEngine:
         self.obj[slot] = tr
         self.n_active += 1
         for li in links:
-            self.members[li].add(slot)
+            self.members[li][slot] = None
             self.link_act[li] += 1.0
             self._link_objs[li].active += 1
         return slot
@@ -137,7 +143,7 @@ class NetworkEngine:
         self.obj[slot] = None
         self.n_active -= 1
         for li in links:
-            self.members[li].discard(slot)
+            self.members[li].pop(slot, None)
             self.link_act[li] -= 1.0
             self._link_objs[li].active -= 1
         self._free.append(slot)
@@ -190,7 +196,7 @@ class NetworkEngine:
         """Slot indices of active transfers with < 1 byte remaining."""
         return np.nonzero(self.active & (self.rem <= _DONE_EPS))[0]
 
-    def _rate_slots(self, slots: set[int],
+    def _rate_slots(self, slots: list[int],
                     share: Optional[np.ndarray] = None) -> None:
         """Recompute rate = min over the slot's links of bw/active for
         ``slots``. Pure function of current link occupancy, so re-rating a
@@ -259,10 +265,15 @@ class NetworkEngine:
         # of current occupancy, so this is exactly the same computation.
         changed = list(changed)
         if len(changed) == 1:
-            slots = self.members[changed[0]]
+            slots = list(self.members[changed[0]])
         else:
-            slots = set().union(*(self.members[li] for li in changed)) \
-                if changed else set()
+            # merge the changed links' member dicts: a transfer crossing
+            # several changed links dedups, and the batch keeps a
+            # deterministic (changed-order, then allocation-order) order
+            merged: dict[int, None] = {}
+            for li in changed:
+                merged.update(self.members[li])
+            slots = list(merged)
         if self._use_kernel:
             if slots:
                 idx = np.fromiter(slots, np.intp, len(slots))

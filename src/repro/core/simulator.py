@@ -51,6 +51,7 @@ Beyond the paper (fault-tolerance axis of this framework):
 from __future__ import annotations
 
 import collections
+import copy
 import dataclasses
 import heapq
 import random as _random
@@ -70,6 +71,9 @@ from .topology import GridTopology
 # --------------------------------------------------------------------------
 (SUBMIT, NET, CPU_DONE, FAIL, RECOVER, SLOW_START, SLOW_END, WATCHDOG,
  FLUSH, ECON) = range(10)
+
+EVENT_NAMES = ("SUBMIT", "NET", "CPU_DONE", "FAIL", "RECOVER", "SLOW_START",
+               "SLOW_END", "WATCHDOG", "FLUSH", "ECON")
 
 #: Values the ``net=`` engine flag accepts: NetworkEngine backends plus
 #: ``"topmost"``, which keeps the numpy backend over a topology built with
@@ -122,6 +126,16 @@ class JobRecord:
         return self.finish_time - self.submit_time
 
 
+@dataclasses.dataclass(frozen=True)
+class TieRace:
+    """One same-timestamp event group whose handler order changes
+    observable state (found by the ``sanitize=True`` engine mode)."""
+
+    time: float
+    kinds: tuple[str, ...]       # event kinds in the tie group, seq order
+    detail: str                  # first state divergence, human-readable
+
+
 @dataclasses.dataclass
 class SimResult:
     records: list[JobRecord]
@@ -155,6 +169,7 @@ class GridSimulator:
         net: str = "numpy",
         econ: str = "numpy",
         econ_interval: Optional[float] = None,
+        sanitize: bool = False,
     ) -> None:
         self.topology = topology
         self.catalog = catalog
@@ -253,6 +268,20 @@ class GridSimulator:
             raise ValueError(f"unknown broker {broker!r} (want 'event'|'jax')")
         self._batch_buf: list[Job] = []
         self._flush_pending = False
+
+        # -- tie-race sanitizer (dev/test mode; see docs/ANALYSIS.md) ------
+        # For every group of >= 2 events sharing a timestamp, a deep-copied
+        # twin replays the instant with the group's order reversed and the
+        # canonicalized observable states are compared. Requires the
+        # sequential broker: twins deep-copy the whole engine, and the jax
+        # brokers hold device buffers + catalog listeners that a twin must
+        # not share (ReplicaCatalog.__deepcopy__ drops listeners).
+        if sanitize and self._jax_broker is not None:
+            raise ValueError("sanitize=True requires broker='event' "
+                             "(twin replay deep-copies the engine)")
+        self.sanitize = sanitize
+        self.ties_seen = 0
+        self.tie_races: list[TieRace] = []
 
         self._q: list[tuple[float, int, int, object]] = []
         self._seq = 0
@@ -674,70 +703,15 @@ class GridSimulator:
             self._econ_armed = True
             self._push(self.now + self._econ_interval, ECON, None)
         while self._q:
+            if self.sanitize:
+                if not self._sanitize_step(until):
+                    break
+                continue
             t, _, kind, payload = heapq.heappop(self._q)
             if t > until:
                 break
             self.now = t
-            if kind == SUBMIT:
-                # submit_time was stamped at first submission; resubmitted
-                # jobs (failures) keep it so job_time spans the whole outage.
-                if self._jax_broker is None:
-                    self._schedule(payload)  # type: ignore[arg-type]
-                elif self.batch_window > 0:
-                    # collect; dispatch together once the window closes
-                    # (batching adds latency — it never violates causality)
-                    self._batch_buf.append(payload)  # type: ignore[arg-type]
-                    if not self._flush_pending:
-                        self._flush_pending = True
-                        self._push(t + self.batch_window, FLUSH, None)
-                else:
-                    self._dispatch_batch(self._drain_submit_batch(payload))  # type: ignore[arg-type]
-            elif kind == FLUSH:
-                self._flush_pending = False
-                batch, self._batch_buf = self._batch_buf, []
-                if batch:
-                    self._dispatch_batch(batch)
-            elif kind == NET:
-                if payload != self._net_version:
-                    continue
-                self._net_advance()
-                done_idx = self.network.completions()
-                if done_idx.size:
-                    done = sorted((self.network.obj[i] for i in done_idx),
-                                  key=lambda tr: tr.tid)
-                    for tr in done:
-                        self._finish_transfer(tr)
-                else:
-                    self._net_rerate()
-            elif kind == CPU_DONE:
-                site, ver = payload  # type: ignore[misc]
-                if ver != self._cpu_version[site]:
-                    continue
-                self._cpu_advance(site)
-                js = self._running[site]
-                if js is None:
-                    continue
-                self._running[site] = None
-                self._finish_job(js)
-                self._maybe_start_cpu(site)
-            elif kind == FAIL:
-                self._fail_site(payload)  # type: ignore[arg-type]
-            elif kind == RECOVER:
-                self._recover_site(payload)  # type: ignore[arg-type]
-            elif kind == SLOW_START:
-                site, factor = payload  # type: ignore[misc]
-                self._cpu_advance(site)
-                self.topology.sites[site].compute_capacity *= factor
-                self._reschedule_cpu(site)
-            elif kind == SLOW_END:
-                site, factor = payload  # type: ignore[misc]
-                self._cpu_advance(site)
-                self.topology.sites[site].compute_capacity /= factor
-                self._reschedule_cpu(site)
-            elif kind == WATCHDOG:
-                self._watchdog(payload)  # type: ignore[arg-type]
-            elif kind == ECON:
-                self._econ_round()
+            self._handle(kind, payload)
         total_ic = sum(r.inter_comms for r in self.records)
         return SimResult(
             records=self.records,
@@ -746,3 +720,213 @@ class GridSimulator:
             total_lan_bytes=self.total_lan_bytes,
             makespan=self.now,
         )
+
+    def _handle(self, kind: int, payload: object) -> None:
+        """Dispatch one popped event (``self.now`` already advanced)."""
+        t = self.now
+        if kind == SUBMIT:
+            # submit_time was stamped at first submission; resubmitted
+            # jobs (failures) keep it so job_time spans the whole outage.
+            if self._jax_broker is None:
+                self._schedule(payload)  # type: ignore[arg-type]
+            elif self.batch_window > 0:
+                # collect; dispatch together once the window closes
+                # (batching adds latency — it never violates causality)
+                self._batch_buf.append(payload)  # type: ignore[arg-type]
+                if not self._flush_pending:
+                    self._flush_pending = True
+                    self._push(t + self.batch_window, FLUSH, None)
+            else:
+                self._dispatch_batch(self._drain_submit_batch(payload))  # type: ignore[arg-type]
+        elif kind == FLUSH:
+            self._flush_pending = False
+            batch, self._batch_buf = self._batch_buf, []
+            if batch:
+                self._dispatch_batch(batch)
+        elif kind == NET:
+            if payload != self._net_version:
+                return
+            self._net_advance()
+            done_idx = self.network.completions()
+            if done_idx.size:
+                done = sorted((self.network.obj[i] for i in done_idx),
+                              key=lambda tr: tr.tid)
+                for tr in done:
+                    self._finish_transfer(tr)
+            else:
+                self._net_rerate()
+        elif kind == CPU_DONE:
+            site, ver = payload  # type: ignore[misc]
+            if ver != self._cpu_version[site]:
+                return
+            self._cpu_advance(site)
+            js = self._running[site]
+            if js is None:
+                return
+            self._running[site] = None
+            self._finish_job(js)
+            self._maybe_start_cpu(site)
+        elif kind == FAIL:
+            self._fail_site(payload)  # type: ignore[arg-type]
+        elif kind == RECOVER:
+            self._recover_site(payload)  # type: ignore[arg-type]
+        elif kind == SLOW_START:
+            site, factor = payload  # type: ignore[misc]
+            self._cpu_advance(site)
+            self.topology.sites[site].compute_capacity *= factor
+            self._reschedule_cpu(site)
+        elif kind == SLOW_END:
+            site, factor = payload  # type: ignore[misc]
+            self._cpu_advance(site)
+            self.topology.sites[site].compute_capacity /= factor
+            self._reschedule_cpu(site)
+        elif kind == WATCHDOG:
+            self._watchdog(payload)  # type: ignore[arg-type]
+        elif kind == ECON:
+            self._econ_round()
+
+    # -- tie-race sanitizer ------------------------------------------------
+    def _sanitize_step(self, until: float) -> bool:
+        """Process one *instant* (every event sharing the head timestamp);
+        when the instant is a tie group, replay it order-reversed in a
+        deep-copied twin and record any observable-state divergence.
+        Returns False when the run should stop (head event past ``until``
+        — popped and dropped, matching the normal loop)."""
+        t = self._q[0][0]
+        if t > until:
+            heapq.heappop(self._q)
+            return False
+        group = sorted(e for e in self._q if e[0] == t)
+        twin = self._tie_twin(t) if len(group) > 1 else None
+        if twin is not None:
+            self.ties_seen += 1
+        self._drain_instant(t)
+        if twin is not None:
+            twin._drain_instant(t)
+            diff = _digest_diff(self._state_digest(), twin._state_digest())
+            if diff is not None:
+                self.tie_races.append(TieRace(
+                    time=t,
+                    kinds=tuple(EVENT_NAMES[e[2]] for e in group),
+                    detail=diff,
+                ))
+        return True
+
+    def _drain_instant(self, t0: float) -> None:
+        """Pop and handle every event at time ``t0`` — including events the
+        handlers push back *at* ``t0`` (sim time never goes backwards, so
+        ``<=`` only ever matches the same instant)."""
+        while self._q and self._q[0][0] <= t0:
+            t, _, kind, payload = heapq.heappop(self._q)
+            self.now = t
+            self._handle(kind, payload)
+
+    def _tie_twin(self, t: float) -> "GridSimulator":
+        """Deep-copied engine whose events at ``t`` are re-queued in
+        reversed seq order (fresh seq numbers keep the (time, seq) key
+        shape; among themselves they pop in the reversed order)."""
+        twin = copy.deepcopy(self)
+        group = []
+        while twin._q and twin._q[0][0] == t:
+            group.append(heapq.heappop(twin._q))
+        for _, _, kind, payload in reversed(group):
+            twin._push(t, kind, payload)
+        return twin
+
+    def _state_digest(self) -> dict:
+        """Canonicalized observable state for twin comparison. Anything
+        whose order is *not* semantic (records, holder sets, transfer
+        tables, the pending-event multiset) is sorted; anything whose
+        order *is* semantic (per-site FIFO CPU queues) keeps its order so
+        a genuine ordering race shows up. Internal version counters, PRNG
+        positions and heap seq numbers are excluded — bookkeeping, not
+        observable results."""
+        d: dict = {"now": self.now}
+        d["records"] = sorted(
+            (r.job_id, r.job_type, r.site, r.submit_time, r.data_ready_time,
+             r.start_time, r.finish_time, r.inter_comms, r.wan_bytes,
+             r.resubmits)
+            for r in self.records)
+        d["sites"] = [(s.site_id, s.online, s.used_storage, s.queued_work,
+                       s.compute_capacity) for s in self.topology.sites]
+        d["storage"] = [sorted(self.storage._contents[s.site_id])
+                        for s in self.topology.sites]
+        d["catalog"] = [(lfn, sorted(self.catalog.holders(lfn)))
+                        for lfn in self.catalog.files]
+        d["transfers"] = sorted(
+            (tr.plan.lfn, tr.plan.src, tr.plan.dst, bool(tr.plan.store),
+             float(self.network.rem[tr.slot]),
+             float(self.network.rate[tr.slot]),
+             sorted(w.job.job_id for w in tr.waiters))
+            for tr in self._transfers.values())
+        d["cpu"] = [
+            (s.site_id,
+             None if self._running[s.site_id] is None
+             else self._running[s.site_id].job.job_id,
+             [js.job.job_id for js in self._cpu_queue[s.site_id]
+              if not js.done])
+            for s in self.topology.sites]
+        d["jobs"] = sorted(
+            (js.job.job_id, site_id, tuple(js.missing),
+             js.pending_transfers, js.data_ready_time, js.start_time,
+             js.done, js.is_backup, js.rounds)
+            for site_id, jobs in self._site_jobs.items()
+            for js in jobs)
+        d["queue"] = sorted(
+            (e[0], e[2], _payload_digest(e[2], e[3])) for e in self._q)
+        d["totals"] = (
+            self.total_wan_bytes, self.total_lan_bytes,
+            sorted(self._inter_comms.items()),
+            sorted(self._wan_bytes.items()),
+            sorted(self._resubmits.items()))
+        return d
+
+
+def _payload_digest(kind: int, payload: object) -> tuple:
+    """Order-comparison key for a pending event's payload. Version
+    counters (NET, CPU_DONE) are *excluded*: twins bump them in different
+    interleavings while converging to the same physical state."""
+    if kind == SUBMIT:
+        return ("job", payload.job_id)             # type: ignore[union-attr]
+    if kind == NET:
+        return ("net",)
+    if kind == CPU_DONE:
+        return ("cpu", payload[0])                 # type: ignore[index]
+    if kind in (FAIL, RECOVER):
+        return ("site", payload)
+    if kind in (SLOW_START, SLOW_END):
+        return ("slow",) + tuple(payload)          # type: ignore[arg-type]
+    if kind == WATCHDOG:
+        return ("watchdog", payload.job.job_id)    # type: ignore[union-attr]
+    return (EVENT_NAMES[kind],)
+
+
+def _digest_diff(a: object, b: object, path: str = "state"
+                 ) -> Optional[str]:
+    """First divergence between two state digests, human-readable."""
+    if type(a) is not type(b):
+        return f"{path}: {type(a).__name__} != {type(b).__name__}"
+    if isinstance(a, dict):
+        assert isinstance(b, dict)
+        for k in a:
+            if k not in b:
+                return f"{path}.{k}: missing in twin"
+            diff = _digest_diff(a[k], b[k], f"{path}.{k}")
+            if diff is not None:
+                return diff
+        extra = [k for k in b if k not in a]
+        if extra:
+            return f"{path}.{extra[0]}: only in twin"
+        return None
+    if isinstance(a, (list, tuple)):
+        assert isinstance(b, (list, tuple))
+        if len(a) != len(b):
+            return f"{path}: length {len(a)} != {len(b)}"
+        for i, (x, y) in enumerate(zip(a, b)):
+            diff = _digest_diff(x, y, f"{path}[{i}]")
+            if diff is not None:
+                return diff
+        return None
+    if a != b:
+        return f"{path}: {a!r} != {b!r}"
+    return None

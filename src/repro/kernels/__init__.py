@@ -1,3 +1,12 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Custom-kernel layer (Pallas TPU + float64 oracles), jax-free to import.
+
+Each subpackage ships a ``kernel.py`` (raw pallas_call wrapper), an
+``ops.py`` (public backend-dispatching entry point), a ``ref.py``
+(reference/oracle), and a ``SPEC`` registry entry (:mod:`.spec`) the
+jaxpr auditor discovers via :func:`.registry.registered_kernels`.
+"""
+
+from .registry import get_kernel_spec, registered_kernels
+from .spec import KernelSpec
+
+__all__ = ["KernelSpec", "get_kernel_spec", "registered_kernels"]

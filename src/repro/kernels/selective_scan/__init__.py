@@ -1,0 +1,26 @@
+"""Mamba1 selective-scan kernel package (registry entry, lazy jax import).
+
+Unlike the sim kernels, ``ops``/``kernel``/``ref`` here import jax at
+module level (they are jitted device ops), so this ``__init__`` defers
+them behind a module ``__getattr__`` — importing the package (as the
+kernel registry does for discovery) pulls no jax.
+"""
+
+from ..spec import SELECTIVE_SCAN_SPEC as SPEC
+
+__all__ = ["SPEC", "selective_scan", "selective_scan_kernel",
+           "selective_scan_ref"]
+
+_LAZY = {
+    "selective_scan": ".ops",
+    "selective_scan_kernel": ".kernel",
+    "selective_scan_ref": ".ref",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(_LAZY[name], __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,206 @@
+"""Kernel registry spec — the uniform shape every kernel package exports.
+
+Each package under :mod:`repro.kernels` (``net_rerate``, ``st_cost``,
+``value_score``, ``selective_scan``, ``flash_attention``) exposes a
+module-level ``SPEC: KernelSpec`` in its ``__init__``. The spec is the
+machine-readable contract the jaxpr auditor (:mod:`repro.analysis`)
+enforces for *every* kernel instead of the old one-off ``st_cost``
+shape-guard test:
+
+* ``max_rank`` — structural rank cap on every intermediate aval in the
+  traced jaxpr. For the sim kernels this is 2 (the whole point of the
+  blocked formulations is never materializing the
+  ``(sites, files, sites)`` / ``(jobs, files, sites)`` broadcasts); for
+  the model kernels it is 3/4 (their *inputs* are rank 3/4 — the banned
+  ``(B, S, D, N)`` scan blow-up and ``(B, H, Sq, Skv)`` logits plane are
+  caught by rank and byte budget respectively).
+* ``budget_bytes`` — per-eqn peak-intermediate budget: for each equation
+  in the jaxpr (pallas bodies included) the auditor sums the aval bytes
+  of its operands and results; the max over equations must stay under
+  budget at the spec's representative audit shapes.
+* ``make_inputs`` — builds the representative-shape float32 numpy inputs
+  the audit traces at (plus the kernel's static kwargs).
+* ``make_small_inputs`` — optional small-shape inputs for the runtime
+  oracle checks (float64 oracle dtype + x64-interpret bit-identity).
+  Only the sim kernels carry these: their refs are pure-numpy oracles
+  (not traceable), so dtype discipline is checked by execution.
+
+This module is imported by every kernel ``__init__`` and therefore MUST
+stay jax-free (the DES engine imports kernel packages on hosts without
+jax installed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+import numpy as np
+
+#: (positional args, static kwargs) pair produced by input builders.
+InputCase = tuple[tuple, dict]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Registry entry for one kernel package.
+
+    Attributes:
+      name: registry key, matches the package name.
+      module: import path of the package (``repro.kernels.<name>``).
+      kernel_attr: entry point in ``<module>.kernel`` taking an
+        ``interpret=`` kwarg (the raw pallas_call wrapper the auditor
+        traces).
+      ref_attr: oracle in ``<module>.ref``.
+      domain: ``"sim"`` (host-facing DES op, float64 numpy oracle,
+        bit-identity contract) or ``"model"`` (jitted device op, jnp
+        reference, tolerance contract).
+      max_rank: max allowed aval rank anywhere in the traced jaxpr.
+      budget_bytes: per-eqn peak intermediate-bytes budget at the audit
+        shapes (float32 trace).
+      make_inputs: audit-shape input builder.
+      make_small_inputs: small-shape builder for runtime oracle checks
+        (sim kernels only; ``None`` for model kernels whose identity
+        contract lives in tests/test_kernels.py tolerances).
+      multi_output: kernel returns a tuple rather than one array.
+    """
+
+    name: str
+    module: str
+    kernel_attr: str
+    ref_attr: str
+    domain: str
+    max_rank: int
+    budget_bytes: int
+    make_inputs: Callable[[], InputCase]
+    make_small_inputs: Callable[[], InputCase] | None = None
+    multi_output: bool = False
+
+    def load_kernel(self) -> Callable[..., Any]:
+        """Import and return the raw kernel entry point (needs jax)."""
+        mod = importlib.import_module(self.module + ".kernel")
+        return getattr(mod, self.kernel_attr)
+
+    def load_ref(self) -> Callable[..., Any]:
+        """Import and return the reference/oracle implementation."""
+        mod = importlib.import_module(self.module + ".ref")
+        return getattr(mod, self.ref_attr)
+
+
+# ---------------------------------------------------------------------------
+# Input builders. Shapes mirror the "representative" parametrizations in
+# tests/test_kernels.py (paper grid = 52 sites x 100 files, bulk bursts of
+# 50 jobs) so budget numbers line up with what the tests exercise. All
+# builders are seeded and pure numpy.
+# ---------------------------------------------------------------------------
+
+
+def _net_rerate_inputs(slots: int, links: int, levels: int,
+                       seed: int = 2) -> InputCase:
+    rng = np.random.default_rng(seed)
+    path = np.where(rng.random((slots, levels)) < 0.35, -1,
+                    rng.integers(0, links, (slots, levels)))
+    path[:, 0] = rng.integers(0, links, slots)
+    rem = (rng.random(slots) * 1e9).astype(np.float32)
+    bw = (rng.random(links) * 1e8 + 1e5).astype(np.float32)
+    act = rng.integers(0, 12, links).astype(np.float32)
+    return ((path.astype(np.int32), rem, bw, act, np.float32(321.5)), {})
+
+
+def _value_score_inputs(sites: int, files: int, seed: int = 2) -> InputCase:
+    rng = np.random.default_rng(seed)
+    demand = (rng.random((sites, files)) * 20.0).astype(np.float32)
+    sizes = (rng.random(files) * 1e9 + 1e6).astype(np.float32)
+    presence = rng.random((sites, files)) < 0.25
+    presence[0, :] = True
+    bw = (rng.random((sites, sites)) * 1.25e8 + 1e5).astype(np.float32)
+    return ((demand, sizes, presence.astype(np.float32), bw),
+            {"mode": "cost"})
+
+
+def _st_cost_inputs(sites: int, files: int, jobs: int,
+                    seed: int = 2) -> InputCase:
+    rng = np.random.default_rng(seed)
+    bw = rng.random((sites, sites)) * 1.25e8 + 1e5
+    presence = rng.random((sites, files)) < 0.2
+    presence[0, :] = True
+    online = rng.random(sites) < 0.85
+    online[0] = True
+    fetch_mask = presence & online[:, None]
+    fetch_mask[0, :] = presence[0, :]
+    sizes = rng.random(files) * 1e9 + 1e6
+    required = rng.random((jobs, files)) < min(0.5, 12.0 / files)
+    rel = rng.random(sites) * 50.0
+    args = tuple(np.asarray(a, np.float32)
+                 for a in (bw, fetch_mask, presence, sizes, required, rel,
+                           online))
+    return (args, {})
+
+
+def _selective_scan_inputs(Bz: int, S: int, Di: int, N: int,
+                           seed: int = 2) -> InputCase:
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((Bz, S, Di)).astype(np.float32)
+    dt = (np.log1p(np.exp(rng.standard_normal((Bz, S, Di)))) * 0.1
+          ).astype(np.float32)
+    B = rng.standard_normal((Bz, S, N)).astype(np.float32)
+    C = rng.standard_normal((Bz, S, N)).astype(np.float32)
+    A = (-np.exp(rng.standard_normal((Di, N)))).astype(np.float32)
+    D = rng.standard_normal(Di).astype(np.float32)
+    h0 = np.zeros((Bz, Di, N), np.float32)
+    return ((x, dt, B, C, A, D, h0), {"chunk": 64, "block_d": 128})
+
+
+def _flash_attention_inputs(B: int, H: int, KV: int, Sq: int, Skv: int,
+                            hd: int, seed: int = 2) -> InputCase:
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((B, H, Sq, hd)).astype(np.float32)
+    k = rng.standard_normal((B, KV, Skv, hd)).astype(np.float32)
+    v = rng.standard_normal((B, KV, Skv, hd)).astype(np.float32)
+    return ((q, k, v), {"causal": True, "block_q": 128, "block_k": 128})
+
+
+#: Budgets are ~1.25x the measured per-eqn peak at the audit shapes and
+#: sit well below the banned dense materializations (see docs/ANALYSIS.md
+#: for the per-kernel headroom math). Keep in sync with
+#: results/ANALYSIS_kernels.json (regenerated by ``python -m
+#: repro.analysis``).
+NET_RERATE_SPEC = KernelSpec(
+    name="net_rerate", module="repro.kernels.net_rerate",
+    kernel_attr="net_rerate_kernel", ref_attr="net_rerate_ref",
+    domain="sim", max_rank=2, budget_bytes=24_000,
+    make_inputs=lambda: _net_rerate_inputs(256, 60, 5),
+    make_small_inputs=lambda: _net_rerate_inputs(37, 23, 4),
+)
+
+ST_COST_SPEC = KernelSpec(
+    name="st_cost", module="repro.kernels.st_cost",
+    kernel_attr="st_cost_kernel", ref_attr="st_cost_ref",
+    domain="sim", max_rank=2, budget_bytes=450_000,
+    make_inputs=lambda: _st_cost_inputs(52, 100, 50),
+    make_small_inputs=lambda: _st_cost_inputs(8, 24, 5),
+)
+
+VALUE_SCORE_SPEC = KernelSpec(
+    name="value_score", module="repro.kernels.value_score",
+    kernel_attr="value_score_kernel", ref_attr="value_score_ref",
+    domain="sim", max_rank=2, budget_bytes=200_000,
+    make_inputs=lambda: _value_score_inputs(52, 100),
+    make_small_inputs=lambda: _value_score_inputs(13, 20),
+)
+
+SELECTIVE_SCAN_SPEC = KernelSpec(
+    name="selective_scan", module="repro.kernels.selective_scan",
+    kernel_attr="selective_scan_kernel", ref_attr="selective_scan_ref",
+    domain="model", max_rank=3, budget_bytes=2_200_000,
+    make_inputs=lambda: _selective_scan_inputs(1, 512, 256, 16),
+    multi_output=True,
+)
+
+FLASH_ATTENTION_SPEC = KernelSpec(
+    name="flash_attention", module="repro.kernels.flash_attention",
+    kernel_attr="flash_attention_kernel", ref_attr="flash_attention_ref",
+    domain="model", max_rank=4, budget_bytes=1_700_000,
+    make_inputs=lambda: _flash_attention_inputs(1, 2, 2, 256, 1024, 64),
+)

@@ -7,7 +7,8 @@ formulation kept only for the bit-identity tests. Importing this package
 pulls no jax — ``ops`` loads it lazily per call, like ``net_rerate``.
 """
 
+from ..spec import ST_COST_SPEC as SPEC
 from .ops import st_cost
 from .ref import st_cost_dense_ref, st_cost_ref
 
-__all__ = ["st_cost", "st_cost_ref", "st_cost_dense_ref"]
+__all__ = ["SPEC", "st_cost", "st_cost_ref", "st_cost_dense_ref"]

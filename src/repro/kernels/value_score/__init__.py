@@ -1,4 +1,5 @@
+from ..spec import VALUE_SCORE_SPEC as SPEC
 from .ops import value_score
 from .ref import value_score_ref
 
-__all__ = ["value_score", "value_score_ref"]
+__all__ = ["SPEC", "value_score", "value_score_ref"]
