@@ -18,8 +18,10 @@ Paper figures (all on the Table-1 grid: 4 regions x 13 sites, 10 GB SEs,
 
 Beyond-paper: scheduler ablation (the paper's scheduler vs random /
 least-loaded / shortest-transfer), jit'd dispatch throughput, fault-
-tolerance run, a 2k/5k/10k-job scale sweep through the batch-dispatch
-broker (writes ``results/BENCH_scale.json``), a network-engine sweep
+tolerance run, a scale sweep through the batch-dispatch broker — 2k/5k/
+10k jobs on the paper grid, the 500-site rungs (incl. the saturated
+numpy-vs-device engine pair) and the 5000-site/1M-job batched-engine
+rung (writes ``results/BENCH_scale.json``), a network-engine sweep
 quantifying the per-link path-contention fidelity change and the
 vectorized re-rate backend (writes ``results/BENCH_net.json``), kernel
 µbenches (interpret mode on CPU).
@@ -200,10 +202,13 @@ def scale_sweep(scale_jobs: int = 100_000) -> None:
     """Beyond-paper: engine scalability sweep with burst arrivals
     dispatched through the jitted batch broker — the ``bulk_diana``
     scenario at 2k/5k/10k jobs on the 52-site paper grid (multi-seed),
-    plus the 500-site / 100k-job ``grid_500`` scale point (incremental
-    presence bitmap + blocked st-cost snapshot hot paths).
-    ``scale_jobs`` caps *every* cell's job count (the CI smoke runs the
-    whole sweep at 2000). Writes machine-readable
+    the 500-site / 100k-job ``grid_500`` scale point (incremental
+    presence bitmap + blocked st-cost snapshot hot paths), the
+    ``grid_500_saturated`` backlog pathology run under *both* network
+    engines (numpy incremental vs batched ``device`` — the engine-pair
+    wall-clock evidence), and the 5000-site / 1M-job ``grid_5000`` rung
+    on the batched engine. ``scale_jobs`` caps *every* cell's job count
+    (the CI smoke runs the whole sweep at 2000). Writes machine-readable
     ``results/BENCH_scale.json``."""
     from repro.core import SCENARIOS
     from repro.launch.experiments import run_scenario
@@ -213,6 +218,7 @@ def scale_sweep(scale_jobs: int = 100_000) -> None:
            for n, seeds in ((2000, (0, 1, 2)), (5000, (0, 1)),
                             (10000, (0, 1)))]
     raw.append(("grid_500", min(100_000, scale_jobs), (0,)))
+    raw.append(("grid_5000", min(1_000_000, scale_jobs), (0,)))
     # a low cap collapses rungs onto the same (scenario, n_jobs) cell:
     # keep each once, with its widest seed set
     merged: dict = {}
@@ -221,11 +227,17 @@ def scale_sweep(scale_jobs: int = 100_000) -> None:
         if key not in merged or len(seeds) > len(merged[key]):
             merged[key] = seeds
     cells = [(scen, n, seeds) for (scen, n), seeds in merged.items()]
-    for scen, n, seeds in cells:
-        spec = SCENARIOS[scen]
+    specs = [(SCENARIOS[scen], n, seeds) for scen, n, seeds in cells]
+    # the saturated cell runs twice — same world, numpy vs device engine
+    sat = SCENARIOS["grid_500_saturated"]
+    for net in ("numpy", "device"):
+        specs.append((dataclasses.replace(sat, net=net),
+                      min(sat.n_jobs, scale_jobs), (0,)))
+    for spec, n, seeds in specs:
         for row in run_scenario(spec, n_jobs=n, seeds=seeds):
             rows.append({
-                "scenario": scen, "n_sites": spec.n_sites,
+                "scenario": spec.name, "n_sites": spec.n_sites,
+                "net": spec.net,
                 "n_jobs": row["n_jobs"], "seed": row["seed"],
                 "wall_s": row["wall_s"],
                 "avg_job_time_s": row["avg_job_time_s"],
@@ -240,10 +252,15 @@ def scale_sweep(scale_jobs: int = 100_000) -> None:
                   indent=1)
     us = (time.perf_counter() - t0) * 1e6 / len(rows)
     biggest = max(rows, key=lambda r: (r["n_sites"], r["n_jobs"]))
+    sat_wall = {r["net"]: r["wall_s"] for r in rows
+                if r["scenario"] == "grid_500_saturated"}
+    speedup = sat_wall["numpy"] / max(sat_wall["device"], 1e-9)
     _row("scale_sweep", us,
-         f"rows={len(rows)};500site_wall={biggest['wall_s']:.1f}s;"
-         f"500site_jobs={biggest['n_jobs']};"
-         f"500site_completed={biggest['completed_jobs']}")
+         f"rows={len(rows)};biggest={biggest['scenario']};"
+         f"biggest_wall={biggest['wall_s']:.1f}s;"
+         f"biggest_jobs={biggest['n_jobs']};"
+         f"biggest_completed={biggest['completed_jobs']};"
+         f"saturated_device_speedup={speedup:.2f}x")
 
 
 def strategy_sweep(n_jobs: int = 10000) -> None:
@@ -397,8 +414,9 @@ BENCHES = {
     "failover": (failover_recovery,
                  "fault-tolerance run: failures + speculative backups"),
     "scale_sweep": (scale_sweep,
-                    "2k/5k/10k-job + 500-site/100k-job engine scale sweep "
-                    "-> BENCH_scale.json"),
+                    "2k/5k/10k-job + 500-site/100k-job + saturated "
+                    "numpy-vs-device engine pair + 5000-site/1M-job scale "
+                    "sweep -> BENCH_scale.json"),
     "strategy_sweep": (strategy_sweep,
                        "reactive vs economic/predictive strategy matrix on "
                        "cache_starved + hotset_drift -> "
@@ -426,10 +444,11 @@ def main(argv=None) -> None:
                          "(default 10000)")
     ap.add_argument("--strategy-jobs", type=int, default=10000,
                     help="job count per strategy_sweep cell (default 10000)")
-    ap.add_argument("--scale-jobs", type=int, default=100_000,
+    ap.add_argument("--scale-jobs", type=int, default=1_000_000,
                     help="cap on every scale_sweep cell's job count "
-                         "(default 100000 = the full 2k/5k/10k + "
-                         "500-site/100k sweep)")
+                         "(default 1000000 = the full 2k/5k/10k + "
+                         "500-site/100k + saturated pair + "
+                         "5000-site/1M sweep)")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     for name in args.bench or BENCHES:

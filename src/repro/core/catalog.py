@@ -32,6 +32,13 @@ class ReplicaCatalog:
         self.files: dict[str, FileInfo] = {}
         self._holders: dict[str, set[int]] = {}
         self._listeners: list[weakref.ref] = []
+        # lazily-bound region index: site -> region map from the first
+        # topology that asks a region query, plus per-file region holder
+        # counts maintained on every mutation (duplicated_in_region is on
+        # the HRS eviction hot path — millions of calls per run)
+        self._region_map: list[int] | None = None
+        self._region_topo: weakref.ref | None = None
+        self._region_counts: dict[str, dict[int, int]] = {}
 
     def __deepcopy__(self, memo: dict) -> "ReplicaCatalog":
         """Deep copy *without* listeners. Listeners are per-instance
@@ -44,6 +51,10 @@ class ReplicaCatalog:
         clone.files = dict(self.files)          # FileInfo is frozen
         clone._holders = {lfn: set(h) for lfn, h in self._holders.items()}
         clone._listeners = []
+        # region index rebinds lazily against the twin's own topology
+        clone._region_map = None
+        clone._region_topo = None
+        clone._region_counts = {}
         return clone
 
     # -- change listeners ---------------------------------------------------
@@ -70,17 +81,30 @@ class ReplicaCatalog:
             raise ValueError(f"duplicate file registration: {lfn}")
         self.files[lfn] = FileInfo(lfn, size, master_site)
         self._holders[lfn] = {master_site}
+        if self._region_map is not None:
+            self._region_counts[lfn] = {self._region_map[master_site]: 1}
         self._notify("on_register_file", lfn)
 
     def add_replica(self, lfn: str, site_id: int) -> None:
-        self._holders[lfn].add(site_id)
+        h = self._holders[lfn]
+        if site_id not in h:
+            h.add(site_id)
+            if self._region_map is not None:
+                rc = self._region_counts[lfn]
+                r = self._region_map[site_id]
+                rc[r] = rc.get(r, 0) + 1
         self._notify("on_add_replica", lfn, site_id)
 
     def remove_replica(self, lfn: str, site_id: int) -> None:
         info = self.files[lfn]
         if site_id == info.master_site:
             raise ValueError(f"cannot delete master copy of {lfn}")
-        self._holders[lfn].discard(site_id)
+        h = self._holders[lfn]
+        if site_id in h:
+            h.discard(site_id)
+            if self._region_map is not None:
+                rc = self._region_counts[lfn]
+                rc[self._region_map[site_id]] -= 1
         self._notify("on_remove_replica", lfn, site_id)
 
     # -- queries -----------------------------------------------------------
@@ -118,10 +142,35 @@ class ReplicaCatalog:
             if topology.sites[h].online or h == master
         )
 
+    def _bind_region_index(self, topology) -> list[int]:
+        """(Re)build the site->region map and the per-file region holder
+        counts against ``topology``. Bound to one topology at a time —
+        rebinding (a fresh topology instance, e.g. a sanitizer twin)
+        rebuilds both from the current holder table."""
+        rm = [topology.region_of(s) for s in range(len(topology.sites))]
+        self._region_map = rm
+        self._region_topo = weakref.ref(topology)
+        counts: dict[str, dict[int, int]] = {}
+        for lfn, holders in self._holders.items():
+            rc: dict[int, int] = {}
+            for h in holders:
+                r = rm[h]
+                rc[r] = rc.get(r, 0) + 1
+            counts[lfn] = rc
+        self._region_counts = counts
+        return rm
+
     def duplicated_in_region(self, lfn: str, site_id: int, topology) -> bool:
-        """True if some *other* site in site_id's region also holds lfn."""
-        region = topology.region_of(site_id)
-        return any(
-            h != site_id and topology.region_of(h) == region
-            for h in self._holders[lfn]
-        )
+        """True if some *other* site in site_id's region also holds lfn.
+
+        O(1): answered from the incrementally-maintained per-file region
+        holder counts (region membership is static per topology, so the
+        count is a pure function of the holder table)."""
+        rm = self._region_map
+        if rm is None or (self._region_topo is not None
+                          and self._region_topo() is not topology):
+            rm = self._bind_region_index(topology)
+        n = self._region_counts[lfn].get(rm[site_id], 0)
+        if site_id in self._holders[lfn]:
+            n -= 1
+        return n > 0

@@ -10,7 +10,7 @@ so mid-tier uplinks congest under through-traffic on deep trees; on
 two-level grids the row is exactly the legacy {source NIC, region uplink}
 pair and results are bit-identical to the pre-refactor engine.
 
-Two interchangeable backends (the ``net=`` engine flag):
+Interchangeable backends (the ``net=`` engine flag):
 
 ``"numpy"`` (default)
     Incremental re-rating: only slots sharing a link whose membership
@@ -29,8 +29,25 @@ Two interchangeable backends (the ``net=`` engine flag):
     interpreter every event (slow; extends the bit-identity contract to
     the kernel itself).
 
-On CPU (oracle and interpret routes) both backends return identical
-results on identical histories; the golden suite pins this
+``"device"``
+    The batched event engine (``repro.kernels.event_engine``): per-event
+    ``rerate`` calls only mark the engine dirty, and the simulator runs
+    one fused *flush* pass per drained event instant — remaining bytes
+    are reconstructed on the fly from each slot's cached ``(rate, eta)``
+    pair, every slot is re-rated, and a running-min over the new etas
+    yields the next NET wake-up. Per-event work is O(1) regardless of
+    how many transfers are in flight (the saturated-backlog pathology of
+    the incremental backend), at the price of ulp-level drift: the
+    reconstruction ``rate * (eta - now)`` rounds differently from the
+    stepwise ``rem -= rate * dt`` integration, so the device engine is
+    pinned to the numpy oracle by *tolerance* goldens
+    (``tests/golden_tolerance.json``), not the bit-exact suite.
+    ``"device-interpret"`` runs the same flush through the Pallas
+    interpreter under x64 (slow; bit-identical to the ``"device"`` CPU
+    route by the kernel's oracle-identity contract).
+
+On CPU (oracle and interpret routes) the numpy and pallas backends return
+identical results on identical histories; the golden suite pins this
 (``tests/test_golden_metrics.py``). The *compiled* TPU kernel computes in
 float32 (TPUs have no f64), so on TPU ``net="pallas"`` is an approximate
 backend — rates drift at the 1e-7 relative level — and the bit-identity
@@ -39,6 +56,7 @@ contract applies to the CPU routes only.
 
 from __future__ import annotations
 
+import math
 from typing import Iterable, Optional
 
 import numpy as np
@@ -50,7 +68,8 @@ from .topology import GridTopology
 # starve: eta increments below the clock's ulp make dt == 0 forever.
 _DONE_EPS = 1.0
 
-BACKENDS = ("numpy", "pallas", "pallas-interpret")
+BACKENDS = ("numpy", "pallas", "pallas-interpret", "device",
+            "device-interpret")
 
 
 class NetworkEngine:
@@ -65,6 +84,7 @@ class NetworkEngine:
         self._ops_backend = {"pallas": "auto",
                              "pallas-interpret": "interpret"}.get(backend)
         self._use_kernel = False
+        self.batched = backend in ("device", "device-interpret")
         if backend == "pallas":
             # resolve the route once: the compiled kernel op on TPU, the
             # inline share-vector gather-min (same math) on CPU. The
@@ -73,6 +93,17 @@ class NetworkEngine:
             import jax
             self._use_kernel = jax.default_backend() == "tpu"
             self._op = net_rerate
+        elif self.batched:
+            # same once-per-engine route resolution for the flush op: the
+            # compiled event_engine kernel on TPU, its float64 numpy
+            # oracle inline on CPU (no per-flush jax dispatch)
+            from repro.kernels.event_engine import (event_engine,
+                                                    event_engine_core)
+            self._flush_op = event_engine
+            self._flush_ref = event_engine_core
+            if backend == "device":
+                import jax
+                self._use_kernel = jax.default_backend() == "tpu"
         n_sites = topology.n_sites
         self.n_links = n_sites + len(topology.wan_links)
         # the engine is the sole bookkeeper of link occupancy: alloc and
@@ -93,12 +124,34 @@ class NetworkEngine:
         self.cap = 64
         self.rem = np.zeros(self.cap)
         self.rate = np.zeros(self.cap)
+        # per-slot completion time cached by the last flush (inf where the
+        # slot has no rate); the batched backend's only integration state —
+        # rem is reconstructed from (rate, eta) instead of being advanced.
+        # `due` is the precomputed completion deadline eta - eps/rate:
+        # completions() is then a single compare against the clock instead
+        # of an O(capacity) rem reconstruction per NET event
+        self.eta = np.full(self.cap, np.inf)
+        self.due = np.full(self.cap, np.inf)
         self.active = np.zeros(self.cap, bool)
         self.path = np.full((self.cap, self.max_links), -1, np.intp)
         self.obj: list[Optional[object]] = [None] * self.cap
         self._free = list(range(self.cap - 1, -1, -1))
         self.n_active = 0
         self.last = 0.0                        # last advance() timestamp
+        self.dirty = False                     # batched: flush pending?
+        # batched: links whose occupancy moved since the last flush
+        # (insertion-ordered dict, same discipline as `members`)
+        self._dirty_links: dict[int, None] = {}
+        # per-event work counters (the saturated-backlog regression test
+        # asserts on these, so they are part of the engine contract):
+        # rerate_calls — rerate() invocations; rerate_slots — slots
+        # re-rated *synchronously inside rerate()* (the incremental
+        # routes' per-event member-union + eta-scan work; identically 0
+        # on the batched backend, whose rerate only marks dirty links);
+        # flush_passes / flush_slots — fused passes and the slots they
+        # re-rated (at most one pass per drained instant).
+        self.stats = {"rerate_calls": 0, "rerate_slots": 0,
+                      "flush_passes": 0, "flush_slots": 0}
         self._pair_paths: Optional[np.ndarray] = None   # lazy (S, S, depth)
 
     # -- slot lifecycle ----------------------------------------------------
@@ -110,6 +163,8 @@ class NetworkEngine:
             self.cap = old * 2
             self.rem = np.concatenate([self.rem, np.zeros(old)])
             self.rate = np.concatenate([self.rate, np.zeros(old)])
+            self.eta = np.concatenate([self.eta, np.full(old, np.inf)])
+            self.due = np.concatenate([self.due, np.full(old, np.inf)])
             self.active = np.concatenate([self.active, np.zeros(old, bool)])
             self.path = np.concatenate(
                 [self.path, np.full((old, self.max_links), -1, np.intp)])
@@ -119,6 +174,8 @@ class NetworkEngine:
         tr.slot = slot
         self.rem[slot] = size
         self.rate[slot] = 0.0
+        self.eta[slot] = np.inf   # unrated: flush reads rem verbatim
+        self.due[slot] = np.inf
         row = self.path[slot]
         row[:] = -1
         row[: len(links)] = links
@@ -139,6 +196,8 @@ class NetworkEngine:
         self.active[slot] = False
         self.rate[slot] = 0.0
         self.rem[slot] = 0.0
+        self.eta[slot] = np.inf
+        self.due[slot] = np.inf
         self.path[slot, :] = -1
         self.obj[slot] = None
         self.n_active -= 1
@@ -186,15 +245,49 @@ class NetworkEngine:
 
     # -- fluid model -------------------------------------------------------
     def advance(self, now: float) -> None:
-        """Integrate all active transfers to ``now``."""
+        """Integrate all active transfers to ``now``.
+
+        The batched backend never integrates on the host: ``rem`` is
+        reconstructed from the cached ``(rate, eta)`` pair whenever it is
+        read (:meth:`rem_now`), so advancing is just moving the clock."""
+        if self.batched:
+            self.last = now
+            return
         dt = now - self.last
         if dt > 0:
             np.maximum(self.rem - self.rate * dt, 0.0, out=self.rem)
         self.last = now
 
+    def rem_now(self, now: Optional[float] = None) -> np.ndarray:
+        """Remaining bytes per slot at ``now`` (default: the clock set by
+        the last :meth:`advance`/:meth:`flush`). On the batched backend
+        this reconstructs ``rate * (eta - now)`` for slots the last flush
+        rated — the exact formulation the flush pass itself uses — and
+        reads the stored array for fresh/released slots; on the
+        incremental backends ``rem`` is already integrated and is
+        returned as-is."""
+        if not self.batched:
+            return self.rem
+        if now is None:
+            now = self.last
+        carried = self.rate > 0.0
+        eta_c = np.where(carried, self.eta, 0.0)
+        return np.maximum(
+            np.where(carried, self.rate * (eta_c - now), self.rem), 0.0)
+
     def completions(self) -> np.ndarray:
-        """Slot indices of active transfers with < 1 byte remaining."""
-        return np.nonzero(self.active & (self.rem <= _DONE_EPS))[0]
+        """Slot indices of active transfers with < 1 byte remaining.
+
+        Batched backends compare the precomputed per-slot deadline
+        (``due = eta - eps/rate``, maintained by :meth:`flush`) against
+        the clock — algebraically the same ``rem <= eps`` test
+        (``rate * (eta - now) <= eps``), one compare per slot instead of
+        a full rem reconstruction per NET event."""
+        if self.batched:
+            # released/fresh slots carry due = inf, so the deadline
+            # compare alone is the active-and-due mask
+            return np.nonzero(self.due <= self.last)[0]
+        return np.nonzero(self.active & (self.rem_now() <= _DONE_EPS))[0]
 
     def _rate_slots(self, slots: list[int],
                     share: Optional[np.ndarray] = None) -> None:
@@ -250,11 +343,23 @@ class NetworkEngine:
           ``-1`` and rate 0) plus the next-completion scan in a single
           kernel invocation under the Pallas interpreter. Slow; exists so
           the bit-identity contract covers the kernel end to end.
+        * device / device-interpret — deferred: record the changed link
+          ids and mark the engine dirty, O(path length) per event no
+          matter how many transfers are in flight; the simulator runs one
+          fused :meth:`flush` per drained event instant, which re-rates
+          the whole dirty neighborhood and reschedules the NET wake-up.
         """
+        self.stats["rerate_calls"] += 1
+        if self.batched:
+            for li in changed:
+                self._dirty_links[li] = None
+            self.dirty = True
+            return None
         if self._ops_backend == "interpret":
             if self.n_active == 0:
                 return None
             from repro.kernels.net_rerate import net_rerate  # deferred: jax
+            self.stats["rerate_slots"] += self.n_active
             rate, eta = net_rerate(self.path, self.rem, self.link_bw,
                                    self.link_act, now, backend="interpret")
             self.rate[:] = rate
@@ -274,6 +379,7 @@ class NetworkEngine:
             for li in changed:
                 merged.update(self.members[li])
             slots = list(merged)
+        self.stats["rerate_slots"] += len(slots)
         if self._use_kernel:
             if slots:
                 idx = np.fromiter(slots, np.intp, len(slots))
@@ -296,3 +402,105 @@ class NetworkEngine:
         if not live.any():
             return None
         return float(np.min(now + self.rem[live] / self.rate[live]))
+
+    def flush(self, now: float) -> Optional[float]:
+        """Batched backends only: fold every occupancy change recorded
+        since the last flush into one fused reconstruct + re-rate +
+        next-completion pass (:mod:`repro.kernels.event_engine`) and
+        clear the dirty state.
+
+        The pass covers the *dirty neighborhood* — the union of the dirty
+        links' member slots, merged once per instant instead of once per
+        event (slots on untouched links keep their cached ``(rate, eta)``
+        pair: rates are pure functions of link occupancy, so they are
+        still exact). The next completion then comes from one vectorized
+        running-min over the cached eta array (released slots are ``inf``)
+        — O(capacity) *per instant*, where the incremental backends pay an
+        O(live) scan per *event*. On TPU (and under ``device-interpret``)
+        the kernel instead sees the full slot array in a single call —
+        subset gathers save nothing when the whole array is one fused
+        device pass — and its running-min output is used directly.
+
+        Writes back the reconstructed ``rem``, the new ``rate`` and the
+        new per-slot ``eta`` (so host readers — completions, the tie-race
+        digest — see state as of ``now``) and returns the earliest
+        completion time, or None when nothing is draining. The simulator
+        calls this once per drained event instant
+        (``GridSimulator._net_flush``)."""
+        self.dirty = False
+        self.last = now
+        self.stats["flush_passes"] += 1
+        if self.n_active == 0:
+            self._dirty_links.clear()
+            return None
+        if self._use_kernel or self.backend == "device-interpret":
+            self._dirty_links.clear()
+            self.stats["flush_slots"] += self.n_active
+            out = self._flush_op(self.path, self.rem, self.rate, self.eta,
+                                 self.link_bw, self.link_act, now,
+                                 backend="pallas" if self._use_kernel
+                                 else "interpret")
+            rem_now, rate_new, eta_new, eta_min = out
+            self.rem[:] = rem_now
+            self.rate[:] = rate_new
+            self.eta[:] = eta_new
+            live = rate_new > 0.0
+            self.due[:] = np.where(
+                live, eta_new - _DONE_EPS / np.where(live, rate_new, 1.0),
+                np.inf)
+            return eta_min if np.isfinite(eta_min) else None
+        # CPU route: the same fused pass (float64 oracle) over the dirty
+        # neighborhood, then the running-min over the eta array
+        merged: dict[int, None] = {}
+        for li in self._dirty_links:
+            merged.update(self.members[li])
+        self._dirty_links.clear()
+        if merged:
+            self.stats["flush_slots"] += len(merged)
+            if len(merged) <= 8:
+                # scalar fast path: same IEEE-double math as the ref pass
+                # (Python floats are f64), skipping the fancy-index
+                # gather/scatter overhead that dominates tiny unions
+                bw, act = self.link_bw, self.link_act
+                for s in merged:
+                    r_new = math.inf
+                    for li in self.path[s]:
+                        if li < 0:
+                            break
+                        a = act[li]
+                        sh = bw[li] / (a if a > 1.0 else 1.0)
+                        if sh < r_new:
+                            r_new = sh
+                    if math.isinf(r_new):   # all-padding row
+                        r_new = 0.0
+                    old_rate = self.rate[s]
+                    if old_rate > 0.0:
+                        rn = old_rate * (self.eta[s] - now)
+                    else:
+                        rn = self.rem[s]
+                    if rn < 0.0:
+                        rn = 0.0
+                    self.rem[s] = rn
+                    self.rate[s] = r_new
+                    if r_new > 0.0:
+                        e = now + rn / r_new
+                        self.eta[s] = e
+                        self.due[s] = e - _DONE_EPS / r_new
+                    else:
+                        self.eta[s] = np.inf
+                        self.due[s] = np.inf
+                eta_min = float(self.eta.min())
+                return eta_min if np.isfinite(eta_min) else None
+            idx = np.fromiter(merged, np.intp, len(merged))
+            rem_now, rate_new, eta_new, _ = self._flush_ref(
+                self.path[idx], self.rem[idx], self.rate[idx],
+                self.eta[idx], self.link_bw, self.link_act, now)
+            self.rem[idx] = rem_now
+            self.rate[idx] = rate_new
+            self.eta[idx] = eta_new
+            live = rate_new > 0.0
+            self.due[idx] = np.where(
+                live, eta_new - _DONE_EPS / np.where(live, rate_new, 1.0),
+                np.inf)
+        eta_min = float(self.eta.min())
+        return eta_min if np.isfinite(eta_min) else None

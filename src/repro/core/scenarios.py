@@ -78,8 +78,8 @@ class ScenarioSpec:
 
     *Engine* — scheduler / replication strategy / broker registry names,
     the network-engine backend ``net`` (``numpy`` | ``pallas`` |
-    ``pallas-interpret`` | ``topmost``, see
-    :class:`repro.core.network.NetworkEngine`), the replication-economy
+    ``pallas-interpret`` | ``device`` | ``device-interpret`` | ``topmost``,
+    see :class:`repro.core.network.NetworkEngine`), the replication-economy
     value-scoring backend ``econ`` + its period ``econ_interval_s``
     (``None`` arms the optimizer only for the access-aware strategies; see
     :mod:`repro.core.economy`) and the seeds to run (one simulation per
@@ -432,6 +432,58 @@ register_scenario(ScenarioSpec(
     interarrival_s=15.0,
     arrival_burst=50,
     broker="jax",
+))
+
+register_scenario(ScenarioSpec(
+    name="grid_500_saturated",
+    description="The grid_500 world driven into backlog on purpose: "
+                "arrivals 30x faster (0.5 s between bursts of 50) over "
+                "10x thinner uplinks (50/100 Mbps), so thousands of "
+                "transfers pile onto every cluster uplink and the "
+                "incremental engine's per-event member union + "
+                "next-completion scan both go O(backlog). scale_sweep "
+                "runs the same 20k-job point under net='numpy' and "
+                "net='device'; the batched engine's O(1)-per-event "
+                "drain must beat the incremental wall clock >=2x here.",
+    probes="saturated-backlog pathology (ROADMAP batched-event item); "
+           "device vs numpy engine wall-clock evidence",
+    tier_fanouts=(5, 10, 10),
+    uplink_mbps=(50.0, 100.0),
+    storage_gb=50.0,
+    catalog_gb=500.0,
+    n_jobs=20_000,
+    n_job_types=10,
+    interarrival_s=0.5,
+    arrival_burst=50,
+    broker="jax",
+    net="device",
+))
+
+register_scenario(ScenarioSpec(
+    name="grid_5000",
+    description="The 5000-site / 1M-job rung: 5 clusters x 10 groups x "
+                "10 subgroups x 10 sites (graded 10000/2000/1000 Mbps "
+                "uplinks, 50 GB SEs) over a 2000-file / 1 TB catalog, a "
+                "million jobs arriving in bursts of 50 every 75 s (the "
+                "same per-site pressure as grid_500), each burst placed "
+                "by one jitted batch decision. Runs on the batched "
+                "on-device event engine (net='device'): occupancy "
+                "changes only mark the engine dirty and every drained "
+                "instant re-rates + reconstructs + scans in one fused "
+                "pass, so per-event network work no longer grows with "
+                "the in-flight count.",
+    probes="engine scale (5000-site / 1M-job ROADMAP rung); batched "
+           "event-engine drain + tolerance-golden contract at scale",
+    tier_fanouts=(5, 10, 10, 10),
+    uplink_mbps=(10000.0, 2000.0, 1000.0),
+    storage_gb=50.0,
+    catalog_gb=1000.0,
+    n_jobs=1_000_000,
+    n_job_types=20,
+    interarrival_s=1.5,
+    arrival_burst=50,
+    broker="jax",
+    net="device",
 ))
 
 register_scenario(ScenarioSpec(

@@ -353,6 +353,24 @@ class GridSimulator:
 
     def _net_rerate(self, changed: tuple[int, ...] = ()) -> None:
         eta = self.network.rerate(changed, self.now)
+        if self.network.batched:
+            # deferred: rerate only marked the engine dirty; the single
+            # fused flush at the end of the drained instant re-rates and
+            # reschedules the NET wake-up (`_net_flush`)
+            return
+        self._net_version += 1
+        if eta is not None:
+            self._push(eta, NET, self._net_version)
+
+    def _net_flush(self) -> None:
+        """Batched engine only: fold everything the drained instant
+        changed into one fused device pass and reschedule the NET
+        wake-up. No-op on the incremental backends (never dirty) and on
+        clean instants."""
+        net = self.network
+        if not net.dirty:
+            return
+        eta = net.flush(self.now)
         self._net_version += 1
         if eta is not None:
             self._push(eta, NET, self._net_version)
@@ -702,10 +720,21 @@ class GridSimulator:
             # history holds a usable demand signal
             self._econ_armed = True
             self._push(self.now + self._econ_interval, ECON, None)
+        batched = self.network.batched
         while self._q:
             if self.sanitize:
                 if not self._sanitize_step(until):
                     break
+                continue
+            if batched:
+                # batched drain: handle every event sharing the head
+                # timestamp, then let _drain_instant's flush loop run the
+                # one fused network pass for the whole instant
+                t = self._q[0][0]
+                if t > until:
+                    heapq.heappop(self._q)
+                    break
+                self._drain_instant(t)
                 continue
             t, _, kind, payload = heapq.heappop(self._q)
             if t > until:
@@ -815,11 +844,19 @@ class GridSimulator:
     def _drain_instant(self, t0: float) -> None:
         """Pop and handle every event at time ``t0`` — including events the
         handlers push back *at* ``t0`` (sim time never goes backwards, so
-        ``<=`` only ever matches the same instant)."""
+        ``<=`` only ever matches the same instant). On the batched network
+        engine each drained round ends with the instant's one fused flush
+        (``_net_flush``); a flush may reschedule the NET wake-up back *at*
+        ``t0`` (a slot within the sub-byte done-epsilon), so the outer
+        loop re-drains until the instant is quiet. On the incremental
+        backends the flush is a no-op and the inner loop drains everything
+        in one round — the pre-batching behavior, bit for bit."""
         while self._q and self._q[0][0] <= t0:
-            t, _, kind, payload = heapq.heappop(self._q)
-            self.now = t
-            self._handle(kind, payload)
+            while self._q and self._q[0][0] <= t0:
+                t, _, kind, payload = heapq.heappop(self._q)
+                self.now = t
+                self._handle(kind, payload)
+            self._net_flush()
 
     def _tie_twin(self, t: float) -> "GridSimulator":
         """Deep-copied engine whose events at ``t`` are re-queued in
@@ -853,9 +890,10 @@ class GridSimulator:
                         for s in self.topology.sites]
         d["catalog"] = [(lfn, sorted(self.catalog.holders(lfn)))
                         for lfn in self.catalog.files]
+        rem_now = self.network.rem_now(self.now)
         d["transfers"] = sorted(
             (tr.plan.lfn, tr.plan.src, tr.plan.dst, bool(tr.plan.store),
-             float(self.network.rem[tr.slot]),
+             float(rem_now[tr.slot]),
              float(self.network.rate[tr.slot]),
              sorted(w.job.job_id for w in tr.waiters))
             for tr in self._transfers.values())

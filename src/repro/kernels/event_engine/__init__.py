@@ -1,0 +1,5 @@
+from ..spec import EVENT_ENGINE_SPEC as SPEC
+from .ops import event_engine
+from .ref import event_engine_core, event_engine_ref
+
+__all__ = ["SPEC", "event_engine", "event_engine_core", "event_engine_ref"]

@@ -1,0 +1,122 @@
+"""Pallas TPU kernel for the batched event-engine flush.
+
+The ``net="device"`` engine backend defers every link-occupancy change
+within one event instant and then runs this single fused pass: remaining
+bytes are reconstructed from the cached ``(rate, eta)`` pair, every slot
+is re-rated (gather-min of per-link fair shares along its path, as in
+:mod:`repro.kernels.net_rerate`), and a running-min reduction over the new
+etas yields the next NET wake-up — one device call per drained instant
+instead of one per event.
+
+Layout matches ``net_rerate``: the path matrix is transposed to
+``(max_links, slots)`` so the slot axis rides the lanes (padded to a lane
+multiple) and the small static level axis is unrolled in the kernel; the
+slot-state rows (rem/rate/eta) are ``(1, slots)`` VMEM rows, link
+bandwidth/occupancy are ``(1, links)`` rows, ``now`` sits in SMEM. One
+program sees the whole batch — even 100k slots is a few MB of VMEM.
+
+Interpret mode under ``jax.experimental.enable_x64`` computes in float64
+and is bit-identical to ``ref.event_engine_ref`` (where/multiply/divide/
+min are exact IEEE ops) — the contract the jaxpr auditor and
+``tests/test_kernels.py`` pin.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Lane width of the slot axis; the level axis is padded to the float32
+# sublane minimum so the compiled layout is legal on TPU.
+_LANES = 128
+_SUBLANES = 8
+
+
+def _event_flush_kernel(path_ref, rem_ref, rate_ref, eta_ref, bw_ref,
+                        act_ref, now_ref, rem_out, rate_out, eta_out,
+                        eta_min_ref, *, levels: int):
+    share = bw_ref[0, :] / jnp.maximum(1.0, act_ref[0, :])     # (links,)
+    rate_new = None
+    has_link = None
+    for lvl in range(levels):                                   # static unroll
+        idx = path_ref[lvl, :]                                  # (slots,)
+        valid = idx >= 0
+        sh = jnp.where(valid, jnp.take(share, jnp.maximum(idx, 0)), jnp.inf)
+        rate_new = sh if rate_new is None else jnp.minimum(rate_new, sh)
+        has_link = valid if has_link is None else has_link | valid
+    rate_new = jnp.where(has_link, rate_new, 0.0)
+    now = now_ref[0, 0]
+    rate_old = rate_ref[0, :]
+    carried = rate_old > 0.0
+    # mask dead slots' inf etas before the multiply (no 0*inf NaNs)
+    eta_c = jnp.where(carried, eta_ref[0, :], 0.0)
+    rem_now = jnp.maximum(
+        jnp.where(carried, rate_old * (eta_c - now), rem_ref[0, :]), 0.0)
+    live = rate_new > 0.0
+    eta_new = jnp.where(live, now + rem_now / jnp.where(live, rate_new, 1.0),
+                        jnp.inf)
+    rem_out[0, :] = rem_now
+    rate_out[0, :] = rate_new
+    eta_out[0, :] = eta_new
+    eta_min_ref[0, 0] = jnp.min(eta_new)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _flush_call(path, rem, rate, eta, link_bw, link_act, now, *,
+                interpret: bool):
+    levels, slots = path.shape
+    dtype = rem.dtype
+    kernel = functools.partial(_event_flush_kernel, levels=levels)
+    rem_now, rate_new, eta_new, eta_min = pl.pallas_call(
+        kernel,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.VMEM)] * 6
+        + [pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_specs=[pl.BlockSpec(memory_space=pltpu.VMEM)] * 3
+        + [pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_shape=[jax.ShapeDtypeStruct((1, slots), dtype),
+                   jax.ShapeDtypeStruct((1, slots), dtype),
+                   jax.ShapeDtypeStruct((1, slots), dtype),
+                   jax.ShapeDtypeStruct((1, 1), dtype)],
+        interpret=interpret,
+    )(path, rem.reshape(1, slots), rate.reshape(1, slots),
+      eta.reshape(1, slots), link_bw.reshape(1, -1),
+      link_act.reshape(1, -1), now.reshape(1, 1))
+    return rem_now[0], rate_new[0], eta_new[0], eta_min[0, 0]
+
+
+def event_engine_kernel(path, rem, rate, eta, link_bw, link_act, now, *,
+                        interpret: bool = False):
+    """Same contract as :func:`..ref.event_engine_ref`, computed by the
+    Pallas kernel. ``path`` is ``(slots, max_links)`` (-1 padded); dtypes
+    follow ``rem`` (float32 compiled on TPU, float64 under x64 interpret).
+    """
+    path = jnp.asarray(path, jnp.int32)
+    rem = jnp.asarray(rem)
+    slots, levels = path.shape
+    if slots == 0:
+        z = jnp.zeros((0,), rem.dtype)
+        return z, z, z, jnp.asarray(jnp.inf, rem.dtype)
+    pad_s = (-slots) % _LANES
+    pad_l = (-levels) % _SUBLANES
+    # transpose so slots ride the lanes; padded slots are all -1 path rows
+    # with zeroed state — they re-rate to 0 and an inf eta, dropping out
+    # of the min
+    path_t = jnp.pad(path.T, ((0, pad_l), (0, pad_s)), constant_values=-1)
+    rem_p = jnp.pad(jnp.asarray(rem), (0, pad_s))
+    rate_p = jnp.pad(jnp.asarray(rate, rem.dtype), (0, pad_s))
+    eta_p = jnp.pad(jnp.asarray(eta, rem.dtype), (0, pad_s))
+    nlinks = link_bw.shape[0]
+    pad_k = (-nlinks) % _LANES
+    # padded links get bw=1/act=1 (share 1.0); no real path row indexes them
+    bw_p = jnp.pad(jnp.asarray(link_bw, rem.dtype), (0, pad_k),
+                   constant_values=1.0)
+    act_p = jnp.pad(jnp.asarray(link_act, rem.dtype), (0, pad_k),
+                    constant_values=1.0)
+    now = jnp.asarray(now, rem.dtype)
+    rem_now, rate_new, eta_new, eta_min = _flush_call(
+        path_t, rem_p, rate_p, eta_p, bw_p, act_p, now, interpret=interpret)
+    return rem_now[:slots], rate_new[:slots], eta_new[:slots], eta_min

@@ -1,0 +1,69 @@
+"""Public wrapper for the event-engine flush (pallas / interpret / numpy).
+
+Like :mod:`repro.kernels.net_rerate`, this op is called from the
+discrete-event loop (host code, once per drained event instant), so the
+wrapper returns host numpy values and picks the backend per call:
+
+  * ``"auto"``   — the compiled Pallas kernel on TPU; the float64 numpy
+    oracle on CPU (no per-instant jax dispatch overhead). This is what
+    ``net="device"`` uses.
+  * ``"pallas"`` — force the compiled kernel. Compiled TPU execution is
+    float32 (no f64 on TPU): extra ~1e-7 relative drift on top of the
+    reconstruction drift the tolerance goldens already bound.
+  * ``"interpret"`` — the kernel under the Pallas interpreter with x64
+    enabled: slow, but bit-identical to the oracle; used by the kernel
+    tests and the ``net="device-interpret"`` engine flag.
+  * ``"numpy"``  — the oracle directly.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .ref import event_engine_ref
+
+
+def event_engine(path, rem, rate, eta, link_bw, link_act, now, *,
+                 backend: str = "auto"
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, float]:
+    """Run one fused flush pass over all transfer slots.
+
+    See :func:`.ref.event_engine_ref` for the argument contract. Returns
+    a host ``(rem_now, rate_new, eta_new, eta_min)`` tuple regardless of
+    backend.
+    """
+    if backend in ("auto", "pallas", "interpret"):
+        import jax
+
+        if backend == "pallas" or (backend == "auto"
+                                   and jax.default_backend() == "tpu"):
+            from .kernel import event_engine_kernel
+            out = event_engine_kernel(
+                np.asarray(path, np.int32), np.asarray(rem, np.float32),
+                np.asarray(rate, np.float32), np.asarray(eta, np.float32),
+                np.asarray(link_bw, np.float32),
+                np.asarray(link_act, np.float32), np.float32(now))
+            rem_now, rate_new, eta_new, eta_min = out
+            return (np.asarray(rem_now, np.float64),
+                    np.asarray(rate_new, np.float64),
+                    np.asarray(eta_new, np.float64), float(eta_min))
+        if backend == "interpret":
+            from jax.experimental import enable_x64
+
+            from .kernel import event_engine_kernel
+            with enable_x64():
+                out = event_engine_kernel(
+                    np.asarray(path, np.int32), np.asarray(rem, np.float64),
+                    np.asarray(rate, np.float64), np.asarray(eta, np.float64),
+                    np.asarray(link_bw, np.float64),
+                    np.asarray(link_act, np.float64), np.float64(now),
+                    interpret=True)
+            rem_now, rate_new, eta_new, eta_min = out
+            return (np.asarray(rem_now, np.float64),
+                    np.asarray(rate_new, np.float64),
+                    np.asarray(eta_new, np.float64), float(eta_min))
+        backend = "numpy"
+    if backend != "numpy":
+        raise ValueError(f"unknown event_engine backend {backend!r} "
+                         "(want 'auto'|'pallas'|'interpret'|'numpy')")
+    return event_engine_ref(path, rem, rate, eta, link_bw, link_act, now)

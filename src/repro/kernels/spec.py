@@ -108,6 +108,31 @@ def _net_rerate_inputs(slots: int, links: int, levels: int,
     return ((path.astype(np.int32), rem, bw, act, np.float32(321.5)), {})
 
 
+def _event_engine_inputs(slots: int, links: int, levels: int,
+                         seed: int = 3) -> InputCase:
+    rng = np.random.default_rng(seed)
+    path = np.where(rng.random((slots, levels)) < 0.35, -1,
+                    rng.integers(0, links, (slots, levels)))
+    path[:, 0] = rng.integers(0, links, slots)
+    # mix of slot states: ~1/4 released (all-padding path, zeroed state),
+    # ~1/3 freshly allocated (no cached rate yet, rem used verbatim), the
+    # rest carried over from a previous flush with a finite (rate, eta)
+    freed = rng.random(slots) < 0.25
+    path[freed] = -1
+    rem = (rng.random(slots) * 1e9).astype(np.float32)
+    rate = (rng.random(slots) * 1e7 + 1.0).astype(np.float32)
+    fresh = rng.random(slots) < 0.3
+    rate[fresh | freed] = 0.0
+    rem[freed] = 0.0
+    now = 321.5
+    eta = (now + rng.random(slots) * 5e3).astype(np.float32)
+    eta[rate == 0.0] = np.inf
+    bw = (rng.random(links) * 1e8 + 1e5).astype(np.float32)
+    act = rng.integers(0, 12, links).astype(np.float32)
+    return ((path.astype(np.int32), rem, rate, eta, bw, act,
+             np.float32(now)), {})
+
+
 def _value_score_inputs(sites: int, files: int, seed: int = 2) -> InputCase:
     rng = np.random.default_rng(seed)
     demand = (rng.random((sites, files)) * 20.0).astype(np.float32)
@@ -172,6 +197,15 @@ NET_RERATE_SPEC = KernelSpec(
     domain="sim", max_rank=2, budget_bytes=24_000,
     make_inputs=lambda: _net_rerate_inputs(256, 60, 5),
     make_small_inputs=lambda: _net_rerate_inputs(37, 23, 4),
+)
+
+EVENT_ENGINE_SPEC = KernelSpec(
+    name="event_engine", module="repro.kernels.event_engine",
+    kernel_attr="event_engine_kernel", ref_attr="event_engine_ref",
+    domain="sim", max_rank=2, budget_bytes=20_000,
+    make_inputs=lambda: _event_engine_inputs(256, 60, 5),
+    make_small_inputs=lambda: _event_engine_inputs(37, 23, 4),
+    multi_output=True,
 )
 
 ST_COST_SPEC = KernelSpec(

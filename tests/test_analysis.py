@@ -336,8 +336,8 @@ def test_cli_clean_run_exits_zero():
 
 # -- kernel registry (satellite: uniform packages) --------------------------
 
-KERNEL_NAMES = {"net_rerate", "st_cost", "value_score", "selective_scan",
-                "flash_attention"}
+KERNEL_NAMES = {"net_rerate", "event_engine", "st_cost", "value_score",
+                "selective_scan", "flash_attention"}
 
 
 def test_registry_discovers_all_kernels():
@@ -373,6 +373,28 @@ def test_jaxpr_audit_single_kernel_ok():
     entry = audit_kernel(get_kernel_spec("net_rerate"))
     assert entry["ok"], entry["checks"]
     assert entry["max_rank"] <= 2
+    assert entry["checks"]["oracle_f64"]
+    assert entry["checks"]["x64_interpret_identity"]
+
+
+def test_jaxpr_audit_event_engine_pinned():
+    """The batched event-engine flush kernel is registered and gated by
+    the auditor with the same sim-kernel contract as net_rerate: rank
+    ceiling 2 (no dense (slots, links, ·) materialization), a tight byte
+    budget at the audit shapes, no host callbacks, and x64-interpret
+    bit-identity against its float64 oracle — the intra-route half of
+    the two-tier golden contract (the inter-engine half lives in
+    tests/golden_tolerance.json)."""
+    from repro.analysis.jaxpr_audit import audit_kernel
+    from repro.kernels import get_kernel_spec
+    spec = get_kernel_spec("event_engine")
+    assert spec.domain == "sim"
+    assert spec.max_rank == 2
+    assert spec.multi_output
+    entry = audit_kernel(spec)
+    assert entry["ok"], entry["checks"]
+    assert entry["callbacks"] == []
+    assert entry["peak_eqn_bytes"] <= spec.budget_bytes
     assert entry["checks"]["oracle_f64"]
     assert entry["checks"]["x64_interpret_identity"]
 

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.event_engine import event_engine, event_engine_ref
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.net_rerate import net_rerate, net_rerate_ref
@@ -117,6 +118,66 @@ def test_net_rerate_interpret_matches_oracle(seed, slots, links, levels):
     rate_k, eta_k = net_rerate(path, rem, bw, act, 321.5, backend="interpret")
     assert np.array_equal(rate_k, rate_ref)
     assert eta_k == eta_ref
+
+
+def _event_engine_case(seed, slots, links, levels):
+    """Mixed slot-lifecycle flush inputs: ~1/4 released (all-hole path,
+    zeroed state), ~1/3 freshly allocated (no cached rate — rem is read
+    verbatim), the rest carried from a previous flush with finite
+    (rate, eta)."""
+    rng = np.random.default_rng(seed)
+    path = np.where(rng.random((slots, levels)) < 0.35, -1,
+                    rng.integers(0, links, (slots, levels)))
+    path[:, 0] = rng.integers(0, links, slots)
+    freed = rng.random(slots) < 0.25
+    path[freed] = -1
+    rem = rng.random(slots) * 1e9
+    rate = rng.random(slots) * 1e7 + 1.0
+    fresh = rng.random(slots) < 0.3
+    rate[fresh | freed] = 0.0
+    rem[freed] = 0.0
+    eta = 321.5 + rng.random(slots) * 5e3
+    eta[rate == 0.0] = np.inf
+    bw = rng.random(links) * 1e8 + 1e5
+    act = rng.integers(0, 12, links).astype(float)
+    return path, rem, rate, eta, bw, act
+
+
+@pytest.mark.parametrize("seed,slots,links,levels", [
+    (0, 1, 4, 2),            # single transfer, two-level shape
+    (1, 37, 23, 4),          # ragged (pads to lane/sublane multiples)
+    (2, 256, 60, 5),         # deep 5-tier path shape
+    (3, 1000, 500, 3),       # wide link space
+])
+def test_event_engine_interpret_matches_oracle(seed, slots, links, levels):
+    """The fused event-engine flush kernel (share -> gather-min re-rate ->
+    eta reconstruction -> running-min next completion) under x64
+    interpret mode is *bit-identical* to the float64 numpy oracle — the
+    net_rerate contract extended to the batched engine's once-per-instant
+    pass that golden_tolerance.json pins end-to-end."""
+    path, rem, rate, eta, bw, act = _event_engine_case(seed, slots, links,
+                                                       levels)
+    ref = event_engine_ref(path, rem, rate, eta, bw, act, 321.5)
+    out = event_engine(path, rem, rate, eta, bw, act, 321.5,
+                       backend="interpret")
+    for got, want in zip(out[:3], ref[:3]):
+        assert np.array_equal(got, want)
+    assert out[3] == ref[3]
+
+
+def test_event_engine_all_released_returns_inf():
+    """A flush over nothing but released slots rates everything to zero
+    and reports no next completion (eta_min = inf)."""
+    path = np.full((8, 3), -1, np.int64)
+    z = np.zeros(8)
+    eta = np.full(8, np.inf)
+    bw = np.ones(4) * 1e6
+    act = np.zeros(4)
+    for backend in ("numpy", "interpret"):
+        rem, rate, eta_new, eta_min = event_engine(
+            path, z, z, eta, bw, act, 10.0, backend=backend)
+        assert (rate == 0.0).all() and (rem == 0.0).all()
+        assert np.isinf(eta_new).all() and np.isinf(eta_min)
 
 
 def test_net_rerate_auto_backend_on_cpu_is_exact():

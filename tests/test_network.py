@@ -133,6 +133,83 @@ def test_three_transfer_min_over_path(backend):
     assert lnet.rate[tr.slot] == pytest.approx(50.0)
 
 
+def test_three_transfer_batched_flush_matches_numpy():
+    """The batched ``device`` engine defers re-rates (rerate() only marks
+    dirty links) and resolves the whole instant in one fused flush; the
+    flushed rates must equal the hand-computed incremental fixture above
+    and the returned wake-up must be the global earliest completion."""
+    topo = _topo((2, 2, 2), (50.0, 10.0))
+    net = NetworkEngine(topo, backend="device")
+    assert net.batched
+    slots = {}
+    for name, (src, dst) in {"t1": (0, 6), "t2": (1, 2), "t3": (0, 1)}.items():
+        tr = types.SimpleNamespace(slot=-1)
+        net.alloc(tr, 1e6, topo.link_ids_for(src, dst))
+        assert net.rerate(topo.link_ids_for(src, dst), 0.0) is None
+        slots[name] = tr.slot
+    assert net.dirty
+    eta = net.flush(0.0)
+    assert not net.dirty
+    assert net.rate[slots["t1"]] == pytest.approx(5.0)
+    assert net.rate[slots["t2"]] == pytest.approx(5.0)
+    assert net.rate[slots["t3"]] == pytest.approx(50.0)
+    # the flush returns the next completion: t3 at 1e6 / 50 B/s
+    assert eta == pytest.approx(1e6 / 50.0)
+    assert net.rem_now(0.0)[slots["t1"]] == pytest.approx(1e6)
+
+
+def _burst_stats(backend: str, n_backlog: int) -> tuple[dict, "object"]:
+    """Load one uplink path with ``n_backlog`` in-flight transfers, then
+    replay an identical 16-event same-instant burst on that path and
+    return the engine's work counters for the burst alone."""
+    topo = _topo((2, 2, 2), (50.0, 10.0))
+    net = NetworkEngine(topo, backend=backend)
+    links = topo.link_ids_for(0, 6)
+    for _ in range(n_backlog):
+        tr = types.SimpleNamespace(slot=-1)
+        net.alloc(tr, 1e9, links)
+        net.rerate(links, 0.0)
+    if net.batched:
+        net.flush(0.0)
+    net.stats = {k: 0 for k in net.stats}
+    for _ in range(16):
+        tr = types.SimpleNamespace(slot=-1)
+        net.alloc(tr, 1e6, links)
+        net.rerate(links, 1.0)
+    if net.batched:
+        net.flush(1.0)
+    return net.stats, net
+
+
+def test_device_per_event_work_independent_of_backlog():
+    """Saturated-backlog regression (counter-based, no timing): the numpy
+    engine re-rates the changed-link union on *every* event, so its
+    per-event work grows with the in-flight count; the batched device
+    engine does zero per-event re-rate work (rerate only marks dirty)
+    and pays one fused pass over the dirty neighborhood per instant,
+    however many events the instant carries."""
+    small_np, _ = _burst_stats("numpy", 8)
+    big_np, _ = _burst_stats("numpy", 512)
+    small_dev, _ = _burst_stats("device", 8)
+    big_dev, net_dev = _burst_stats("device", 512)
+
+    # numpy: 16 union re-rates, each touching the whole shared backlog
+    assert big_np["rerate_slots"] >= 16 * 512
+    assert big_np["rerate_slots"] > 4 * small_np["rerate_slots"]
+
+    # device: no per-event slot work at all — backlog size is invisible
+    # until the instant's single flush
+    assert small_dev["rerate_slots"] == big_dev["rerate_slots"] == 0
+    assert big_dev["flush_passes"] == 1
+    assert big_dev["flush_slots"] <= 512 + 16      # one pass, not 16
+
+    # and the fused pass lands on the same floats the incremental
+    # engine integrates to (both are f64 min-over-path fair shares)
+    _, net_np = _burst_stats("numpy", 512)
+    import numpy as np
+    assert np.array_equal(net_dev.rate[:528], net_np.rate[:528])
+
+
 def test_engine_release_and_regrow():
     topo = _topo((2, 2), (10.0,))
     net = NetworkEngine(topo)

@@ -137,3 +137,73 @@ def test_simulator_determinism(seed):
     b = run_experiment(cfg, strategy="hrs", n_jobs=30)
     assert a.avg_job_time == b.avg_job_time
     assert a.avg_inter_comms == b.avg_inter_comms
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n_regions=st.integers(2, 3),
+    spr=st.integers(2, 4),
+    n_jobs=st.integers(5, 30),
+    strategy=st.sampled_from(["hrs", "bhr", "lru"]),
+    seed=st.integers(0, 4),
+)
+def test_device_engine_matches_numpy(n_regions, spr, n_jobs, strategy, seed):
+    """The batched ``device`` engine vs the bit-exact numpy oracle on
+    random small worlds: integer results agree *exactly* (same jobs
+    complete), continuous metrics agree within the eta-reconstruction
+    tolerance (the engine rebuilds remaining bytes as rate * (eta - now),
+    which drifts by ulps from stepwise integration — the honest fidelity
+    break golden_tolerance.json pins on the paper grid)."""
+    from repro.core import GridConfig, run_experiment
+    cfg = GridConfig(n_regions=n_regions, sites_per_region=spr, seed=seed)
+    a = run_experiment(cfg, strategy=strategy, n_jobs=n_jobs, net="numpy")
+    b = run_experiment(cfg, strategy=strategy, n_jobs=n_jobs, net="device")
+    assert b.completed_jobs == a.completed_jobs == n_jobs
+    assert b.total_inter_comms == a.total_inter_comms
+    for metric in ("avg_job_time", "makespan", "total_wan_gb"):
+        assert getattr(b, metric) == pytest.approx(getattr(a, metric),
+                                                   rel=1e-9), metric
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    n_jobs=st.integers(4, 24),
+    strategy=st.sampled_from(["hrs", "lru"]),
+    seed=st.integers(0, 3),
+)
+def test_device_engine_event_invariants(n_jobs, strategy, seed):
+    """Engine invariants observed at every handled event of a batched
+    run: the event clock never goes backwards, and no in-flight transfer
+    is ever overdue by more than the done-epsilon (its cached completion
+    time is honored — equivalently, no reconstructed backlog goes
+    negative past the epsilon)."""
+    from repro.core import GridConfig
+    from repro.core.network import _DONE_EPS
+    from repro.core.simulator import GridSimulator
+    from repro.core.workload import build_catalog, build_topology, generate_jobs
+
+    cfg = GridConfig(n_regions=2, sites_per_region=3, seed=seed)
+    topo = build_topology(cfg)
+    cat = build_catalog(cfg, topo)
+    sim = GridSimulator(topo, cat, strategy=strategy, seed=seed, net="device")
+    for info in cat.files.values():
+        sim.storage.bootstrap(info.master_site, info.lfn)
+    for j, job in enumerate(generate_jobs(cfg, n_jobs)):
+        sim.submit_job(job, at=j * cfg.interarrival)
+
+    import numpy as np
+    clock = []
+    orig_handle = sim._handle
+
+    def spy(kind, payload):
+        clock.append(sim.now)
+        net = sim.network
+        live = net.active & (net.rate > 0.0)
+        overdue = net.rate[live] * (sim.now - net.eta[live])
+        assert (overdue <= _DONE_EPS * (1 + 1e-12)).all()
+        orig_handle(kind, payload)
+
+    sim._handle = spy
+    res = sim.run()
+    assert clock == sorted(clock)
+    assert res.completed_jobs == n_jobs

@@ -26,13 +26,13 @@ SRC_CORE = Path(__file__).resolve().parents[1] / "src" / "repro" / "core"
 
 
 def make_sim(*, scheduler="dataaware", strategy="hrs", sanitize=False,
-             broker="event", seed=0):
+             broker="event", net="numpy", seed=0):
     cfg = GridConfig(seed=seed)
     topology = build_topology(cfg)
     catalog = build_catalog(cfg, topology)
     sim = GridSimulator(topology, catalog, scheduler=scheduler,
                         strategy=strategy, seed=seed, sanitize=sanitize,
-                        broker=broker)
+                        broker=broker, net=net)
     for info in catalog.files.values():
         sim.storage.bootstrap(info.master_site, info.lfn)
     return cfg, sim
@@ -75,6 +75,33 @@ def test_disjoint_placements_commute():
     for job in pinned_jobs(4):
         sim.submit_job(job, at=0.0)
     sim.run()
+    assert sim.ties_seen >= 2    # the SUBMIT burst + the CPU_DONE group
+    assert sim.tie_races == [], sim.tie_races[:1]
+
+
+def test_batched_drain_ties_commute_on_device_engine():
+    """Twin-replay over a same-instant burst on the batched ``device``
+    engine: the whole burst resolves through one fused flush whose
+    per-slot math is permutation-invariant (the dirty-neighborhood
+    gather/scatter and the eta min commute), so reordering the burst must
+    find ties but no observable divergence — even though the engine never
+    re-rates between the reordered handlers.
+
+    Unlike :func:`pinned_jobs`, each job here needs a *second* file
+    mastered in another region, so every placement starts a WAN fetch
+    (single-file jobs run where their data lives and the network never
+    engages) — and jobs 0 and 2 pull across the same pair of region
+    uplinks, so the burst's transfers genuinely share links inside one
+    fused flush."""
+    _, sim = make_sim(sanitize=True, net="device")
+    for j in range(4):
+        sim.submit_job(Job(job_id=j, job_type=0,
+                           required=[f"lfn{4 * j:04d}", f"lfn{4 * j + 2:04d}"],
+                           length=60e9), at=0.0)
+    sim.run()
+    assert sim.network.batched
+    assert sim.network.stats["flush_passes"] > 0
+    assert sim.network.stats["rerate_slots"] == 0   # all work was fused
     assert sim.ties_seen >= 2    # the SUBMIT burst + the CPU_DONE group
     assert sim.tie_races == [], sim.tie_races[:1]
 
