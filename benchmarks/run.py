@@ -206,10 +206,18 @@ def scale_sweep(scale_jobs: int = 100_000) -> None:
     presence bitmap + blocked st-cost snapshot hot paths), the
     ``grid_500_saturated`` backlog pathology run under *both* network
     engines (numpy incremental vs batched ``device`` — the engine-pair
-    wall-clock evidence), and the 5000-site / 1M-job ``grid_5000`` rung
-    on the batched engine. ``scale_jobs`` caps *every* cell's job count
-    (the CI smoke runs the whole sweep at 2000). Writes machine-readable
-    ``results/BENCH_scale.json``."""
+    wall-clock evidence), the eviction-scan-bound ``grid_500_evict``
+    planner-pathology point, and the 5000-site / 1M-job ``grid_5000``
+    rung on the batched engine. The 500-site rungs additionally re-run
+    with ``strategy_mode="batch"`` (one ``strategy_plan`` pass per burst
+    plus cached continuation plans);
+    each batched row carries a ``batched_strategy_speedup`` column — its
+    sequential twin's wall clock over its own. On ``grid_500_evict`` the
+    batched planner must clear 2x: the sequential planner's per-store
+    Python scans (holders walk + per-resident eviction checks) are the
+    wall there, and the batched path amortizes them. ``scale_jobs`` caps
+    *every* cell's job count (the CI smoke runs the whole sweep at
+    2000). Writes machine-readable ``results/BENCH_scale.json``."""
     from repro.core import SCENARIOS
     from repro.launch.experiments import run_scenario
     rows = []
@@ -233,11 +241,27 @@ def scale_sweep(scale_jobs: int = 100_000) -> None:
     for net in ("numpy", "device"):
         specs.append((dataclasses.replace(sat, net=net),
                       min(sat.n_jobs, scale_jobs), (0,)))
+    # the eviction-scan-bound planner regime (the batched replica
+    # strategy's discriminating cell, sequential twin first)
+    evict = SCENARIOS["grid_500_evict"]
+    specs.append((evict, min(evict.n_jobs, scale_jobs), (0,)))
+    # the 500-site rungs re-run with the batched strategy engine — one
+    # strategy_plan pass per 50-job burst instead of 50 sequential
+    # plan_fetch walks. grid_5000 stays sequential: the batched planner's
+    # dense (S, S, depth) path tensor is a 500-site-class structure.
+    for base, n in ((SCENARIOS["grid_500"], min(100_000, scale_jobs)),
+                    (dataclasses.replace(sat, net="numpy"),
+                     min(sat.n_jobs, scale_jobs)),
+                    (dataclasses.replace(sat, net="device"),
+                     min(sat.n_jobs, scale_jobs)),
+                    (evict, min(evict.n_jobs, scale_jobs))):
+        specs.append((dataclasses.replace(base, strategy_mode="batch"),
+                      n, (0,)))
     for spec, n, seeds in specs:
         for row in run_scenario(spec, n_jobs=n, seeds=seeds):
             rows.append({
                 "scenario": spec.name, "n_sites": spec.n_sites,
-                "net": spec.net,
+                "net": spec.net, "strategy_mode": spec.strategy_mode,
                 "n_jobs": row["n_jobs"], "seed": row["seed"],
                 "wall_s": row["wall_s"],
                 "avg_job_time_s": row["avg_job_time_s"],
@@ -245,6 +269,14 @@ def scale_sweep(scale_jobs: int = 100_000) -> None:
                 "completed_jobs": row["completed_jobs"],
                 "makespan_s": row["makespan_s"],
             })
+    # derived column: wall-clock ratio vs the matching sequential cell
+    seq_wall = {(r["scenario"], r["net"], r["n_jobs"], r["seed"]): r["wall_s"]
+                for r in rows if r["strategy_mode"] == "sequential"}
+    for r in rows:
+        key = (r["scenario"], r["net"], r["n_jobs"], r["seed"])
+        if r["strategy_mode"] == "batch" and key in seq_wall:
+            r["batched_strategy_speedup"] = round(
+                seq_wall[key] / max(r["wall_s"], 1e-9), 2)
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, "BENCH_scale.json"), "w") as f:
         json.dump({"strategy": "hrs", "scheduler": "dataaware",
@@ -253,14 +285,23 @@ def scale_sweep(scale_jobs: int = 100_000) -> None:
     us = (time.perf_counter() - t0) * 1e6 / len(rows)
     biggest = max(rows, key=lambda r: (r["n_sites"], r["n_jobs"]))
     sat_wall = {r["net"]: r["wall_s"] for r in rows
-                if r["scenario"] == "grid_500_saturated"}
+                if r["scenario"] == "grid_500_saturated"
+                and r["strategy_mode"] == "sequential"}
     speedup = sat_wall["numpy"] / max(sat_wall["device"], 1e-9)
+    batched = [r for r in rows if r["strategy_mode"] == "batch"
+               and "batched_strategy_speedup" in r]
+    b500 = next((r["batched_strategy_speedup"] for r in batched
+                 if r["scenario"] == "grid_500"), float("nan"))
+    bevict = next((r["batched_strategy_speedup"] for r in batched
+                   if r["scenario"] == "grid_500_evict"), float("nan"))
     _row("scale_sweep", us,
          f"rows={len(rows)};biggest={biggest['scenario']};"
          f"biggest_wall={biggest['wall_s']:.1f}s;"
          f"biggest_jobs={biggest['n_jobs']};"
          f"biggest_completed={biggest['completed_jobs']};"
-         f"saturated_device_speedup={speedup:.2f}x")
+         f"saturated_device_speedup={speedup:.2f}x;"
+         f"batched_strategy_speedup_500={b500:.2f}x;"
+         f"batched_strategy_speedup_evict={bevict:.2f}x")
 
 
 def strategy_sweep(n_jobs: int = 10000) -> None:
@@ -415,8 +456,10 @@ BENCHES = {
                  "fault-tolerance run: failures + speculative backups"),
     "scale_sweep": (scale_sweep,
                     "2k/5k/10k-job + 500-site/100k-job + saturated "
-                    "numpy-vs-device engine pair + 5000-site/1M-job scale "
-                    "sweep -> BENCH_scale.json"),
+                    "numpy-vs-device engine pair + eviction-bound "
+                    "planner point + 5000-site/1M-job scale sweep, "
+                    "500-site rungs also in batched strategy mode "
+                    "-> BENCH_scale.json"),
     "strategy_sweep": (strategy_sweep,
                        "reactive vs economic/predictive strategy matrix on "
                        "cache_starved + hotset_drift -> "

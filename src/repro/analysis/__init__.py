@@ -54,6 +54,8 @@ RULES: dict[str, str] = {
              "mutated inside it without _notify",
     "SL012": "public method reads sync()-maintained snapshot state "
              "without calling sync() first",
+    "SL013": "StorageState private maps touched outside replica.py, or "
+             "mutated inside it without _notify",
 }
 
 #: Files skipped entirely (the linter's own test fixtures would flag).

@@ -25,6 +25,19 @@ motivates checking them statically:
   (transitively). Listener callbacks are exempt because they are the
   incremental maintainers; private helpers are exempt because their
   public callers carry the obligation.
+
+* **SL013 — storage mutations go through the listener-notifying API.**
+  The batched strategy engine (PR 8) mirrors ``StorageState`` into
+  :class:`repro.core.replica.StorageTensorView` via storage listeners,
+  so the storage maps got the same contract the catalog's ``_holders``
+  has under SL011. Outside ``repro/core/replica.py`` nobody touches the
+  private ``_contents`` / ``_pins`` / ``_add_seq`` / ``_lru`` maps:
+  reads go through ``has()`` / ``site_contents()`` / ``is_pinned()`` /
+  ``lru_order()``, writes through ``add()`` / ``touch()`` / ``remove()``
+  / ``pin()`` / ``unpin()`` (which fire ``_notify``). Inside
+  ``replica.py``, every public method that mutates one of those maps
+  must call ``_notify`` in the same body (``_``-private helpers are
+  exempt — their public callers carry the obligation, same as SL012).
 """
 
 from __future__ import annotations
@@ -35,6 +48,8 @@ from .findings import Finding
 
 CATALOG_OWNER_PATH = "repro/core/catalog.py"
 PRIVATE_REPLICA_MAP = "_holders"
+STORAGE_OWNER_PATH = "repro/core/replica.py"
+PRIVATE_STORAGE_MAPS = frozenset(("_contents", "_pins", "_add_seq", "_lru"))
 LISTENER_PREFIX = "on_"
 
 
@@ -109,6 +124,93 @@ def check_catalog_bypass(tree: ast.Module, path: str,
                   f"catalog method {node.name}() mutates _holders without "
                   "firing _notify — listener snapshots (presence bitmaps, "
                   "access axes) go stale")
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# SL013
+# ---------------------------------------------------------------------------
+
+
+def _mutated_storage_maps(node: ast.AST) -> set[str]:
+    """Private-storage-map names this statement mutates through ``self``.
+
+    Unlike ``_holders`` (a flat dict), the storage maps are nested
+    (``self._contents[site][lfn] = ...``), so the target walk descends
+    through arbitrarily many subscripts.
+    """
+    hit: set[str] = set()
+
+    def _collect(expr: ast.AST) -> None:
+        for part in ast.walk(expr):
+            if (isinstance(part, ast.Attribute)
+                    and part.attr in PRIVATE_STORAGE_MAPS
+                    and isinstance(part.value, ast.Name)
+                    and part.value.id == "self"):
+                hit.add(part.attr)
+
+    for sub in ast.walk(node):
+        if isinstance(sub, (ast.Assign, ast.Delete)):
+            for t in sub.targets:
+                if isinstance(t, ast.Subscript):
+                    _collect(t)
+        elif isinstance(sub, (ast.AugAssign, ast.AnnAssign)):
+            if isinstance(sub.target, ast.Subscript):
+                _collect(sub.target)
+        elif isinstance(sub, ast.Call) and isinstance(sub.func, ast.Attribute):
+            if sub.func.attr in ("add", "discard", "remove", "pop", "clear",
+                                 "update", "setdefault", "insert", "append"):
+                _collect(sub.func.value)
+    return hit
+
+
+def check_storage_bypass(tree: ast.Module, path: str,
+                         source: str) -> list[Finding]:
+    """SL013: private storage-map access outside the replica module, and
+    notify-less mutations inside it (see module doc)."""
+    findings: list[Finding] = []
+    lines = source.splitlines()
+    inside_owner = path.endswith(STORAGE_OWNER_PATH) or \
+        path == STORAGE_OWNER_PATH
+
+    if not inside_owner:
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Attribute)
+                    and node.attr in PRIVATE_STORAGE_MAPS):
+                _flag(findings, "SL013", path, lines, node,
+                      f"direct access to StorageState.{node.attr} bypasses "
+                      "the listener-notifying API; use site_contents()/"
+                      "lru_order()/is_pinned() or add_listener() — stale "
+                      "StorageTensorView tensors otherwise")
+        return findings
+
+    # inside replica.py: public mutators must notify listeners, directly or
+    # via a same-class mutator that does (lose() delegates to remove()).
+    for cls in (n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)):
+        methods = _class_methods(cls)
+        mutators = {name: _mutated_storage_maps(fn)
+                    for name, fn in methods.items()}
+        compliant = {name for name, fn in methods.items()
+                     if any(isinstance(sub, ast.Call)
+                            and isinstance(sub.func, ast.Attribute)
+                            and sub.func.attr == "_notify"
+                            for sub in ast.walk(fn))}
+        changed = True
+        while changed:
+            changed = False
+            for name, fn in methods.items():
+                if name not in compliant and _self_calls(fn) & compliant:
+                    compliant.add(name)
+                    changed = True
+        for name in sorted(methods):
+            if name.startswith("_") or name.startswith(LISTENER_PREFIX):
+                continue   # helpers: public callers carry the obligation
+            if mutators[name] and name not in compliant:
+                _flag(findings, "SL013", path, lines, methods[name],
+                      f"{cls.name}.{name}() mutates "
+                      f"{', '.join(sorted(mutators[name]))} without firing "
+                      "_notify — listener mirrors (StorageTensorView) go "
+                      "stale")
     return findings
 
 
@@ -253,8 +355,9 @@ def check_sync_coherence(tree: ast.Module, path: str,
 
 
 def lint_coherence(source: str, path: str) -> list[Finding]:
-    """Run both coherence rules over one file."""
+    """Run all three coherence rules over one file."""
     tree = ast.parse(source, filename=path)
     findings = check_catalog_bypass(tree, path, source)
+    findings += check_storage_bypass(tree, path, source)
     findings += check_sync_coherence(tree, path, source)
     return sorted(findings, key=lambda f: (f.line, f.rule))

@@ -15,8 +15,8 @@ from .scenarios import (ChurnSpec, SCENARIOS, SWEEPS, ScenarioSpec,
                         to_grid_config, with_axis)
 from .replica import (BHRStrategy, FetchPlan, HRSSinglePhaseStrategy,
                       HRSStrategy, LRUStrategy, NoReplicationStrategy,
-                      ReplicaStrategy, StorageState, STRATEGIES,
-                      make_strategy)
+                      ReplicaStrategy, StorageState, StorageTensorView,
+                      STRATEGIES, STRATEGY_MODES, make_strategy)
 from .scheduler import (DataAwareScheduler, Job, LeastLoadedScheduler,
                         RandomScheduler, SchedulerPolicy, SCHEDULERS,
                         ShortestTransferScheduler, make_scheduler)
@@ -36,8 +36,8 @@ __all__ = [
     "register_scenario", "register_sweep", "to_grid_config", "with_axis",
     "BHRStrategy", "FetchPlan", "HRSSinglePhaseStrategy", "HRSStrategy",
     "LRUStrategy",
-    "NoReplicationStrategy", "ReplicaStrategy", "StorageState", "STRATEGIES",
-    "make_strategy", "DataAwareScheduler", "Job", "LeastLoadedScheduler",
+    "NoReplicationStrategy", "ReplicaStrategy", "StorageState",
+    "StorageTensorView", "STRATEGIES", "STRATEGY_MODES", "make_strategy", "DataAwareScheduler", "Job", "LeastLoadedScheduler",
     "RandomScheduler", "SchedulerPolicy", "SCHEDULERS",
     "ShortestTransferScheduler", "make_scheduler", "GridSimulator",
     "JobRecord", "SimResult", "GridTopology", "Link", "Region", "Site",

@@ -211,6 +211,15 @@ class AccessHistory:
         dt = max(now - self.serve_stamps[site], 0.0)
         return float(self.serve_counts[site] * 2.0 ** (-dt / self.half_life_s))
 
+    def serve_loads(self, now: float | None = None) -> np.ndarray:
+        """Vector :meth:`serve_load` for every site at once,
+        ``(n_sites,)`` — the batched planners' serve-discount column. The
+        same ufunc arithmetic as the scalar path, so entry ``s`` equals
+        ``serve_load(s)`` bit for bit."""
+        now = self.last_now if now is None else now
+        dt = np.maximum(now - self.serve_stamps, 0.0)
+        return self.serve_counts * 2.0 ** (-dt / self.half_life_s)
+
     def scores(self, site: int, lfns: list[str] | tuple[str, ...]
                ) -> np.ndarray:
         """Decayed popularity scores for ``lfns`` at ``site``, evaluated at

@@ -19,6 +19,8 @@ from __future__ import annotations
 import dataclasses
 import weakref
 
+import numpy as np
+
 
 @dataclasses.dataclass(frozen=True)
 class FileInfo:
@@ -159,6 +161,22 @@ class ReplicaCatalog:
             counts[lfn] = rc
         self._region_counts = counts
         return rm
+
+    def region_counts_np(self, topology, lfns: list[str]) -> np.ndarray:
+        """Per-region holder counts as a dense ``(n_regions, len(lfns))``
+        array — the bootstrap read of the array-backed strategy mirror
+        (:class:`repro.core.replica.StorageTensorView`), served from the
+        same incrementally-maintained counts :meth:`duplicated_in_region`
+        answers from instead of a holder-table rescan."""
+        if self._region_map is None or (
+                self._region_topo is not None
+                and self._region_topo() is not topology):
+            self._bind_region_index(topology)
+        out = np.zeros((topology.n_regions, len(lfns)), np.int64)
+        for j, lfn in enumerate(lfns):
+            for r, n in self._region_counts[lfn].items():
+                out[r, j] = n
+        return out
 
     def duplicated_in_region(self, lfn: str, site_id: int, topology) -> bool:
         """True if some *other* site in site_id's region also holds lfn.

@@ -41,6 +41,17 @@ sequential policy would (``ValueError`` from the empty ``min``/``max`` for
 the deterministic policies, ``IndexError`` from ``Random.choice(())`` for
 ``random`` — with no PRNG draw consumed), instead of argmin-over-inf
 silently landing every job on site 0.
+
+The batched *strategy* engine (``strategy_mode="batch"``,
+:mod:`repro.core.replica`'s ``_BatchedStrategy`` family) follows the same
+snapshot contract from the other side of the dispatch: once a burst's
+placements are fixed, every missing (job, file) pair is planned against one
+shared presence/bandwidth snapshot — the per-destination column view
+(:meth:`repro.core.network.NetworkEngine.point_bandwidth_columns`) of the
+same matrix the brokers cost with — and intra-burst conflicts are resolved
+by revalidate-or-replan at execution time, exactly the tolerance convention
+the jax brokers established for stale queue loads. Singleton bursts take the
+sequential path bit-for-bit.
 """
 
 from __future__ import annotations

@@ -27,6 +27,7 @@ def run_experiment(
     *,
     scheduler: str = "dataaware",
     strategy: str = "hrs",
+    strategy_mode: str = "sequential",
     n_jobs: int | None = None,
     failures: list[tuple[int, float, float]] | None = None,
     slowdowns: list[tuple[int, float, float, float]] | None = None,
@@ -64,6 +65,13 @@ def run_experiment(
     legacy single-uplink accounting (fidelity baseline). Identical results
     on two-level grids under all of them.
 
+    ``strategy_mode`` picks the planning engine of the replication
+    strategy: ``"sequential"`` (one ``plan_fetch`` per missing file — the
+    default, the golden-pinned path) or ``"batch"`` (whole arrival bursts
+    planned in one :mod:`repro.kernels.strategy_plan` pass; singleton
+    plans are bit-identical to the sequential twin, multi-job bursts
+    share one state snapshot — the jax-broker convention).
+
     ``econ`` picks the value-scoring backend of the replication economy
     (:data:`repro.core.economy.ECON_BACKENDS`, mirroring ``net``) and
     ``econ_interval`` its period in sim seconds — ``None`` arms the
@@ -75,6 +83,7 @@ def run_experiment(
         cfg, path_model="topmost" if net == "topmost" else "full")
     catalog = build_catalog(cfg, topology)
     sim = GridSimulator(topology, catalog, scheduler=scheduler, strategy=strategy,
+                        strategy_mode=strategy_mode,
                         seed=cfg.seed, speculative_backups=speculative_backups,
                         broker=broker, batch_window=batch_window, net=net,
                         econ=econ, econ_interval=econ_interval)

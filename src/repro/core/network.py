@@ -153,6 +153,9 @@ class NetworkEngine:
         self.stats = {"rerate_calls": 0, "rerate_slots": 0,
                       "flush_passes": 0, "flush_slots": 0}
         self._pair_paths: Optional[np.ndarray] = None   # lazy (S, S, depth)
+        # per-destination (link idx, validity) slices of the path tensor,
+        # cached on first use: topology is static, only link shares move
+        self._col_paths: dict[int, tuple[np.ndarray, np.ndarray]] = {}
 
     # -- slot lifecycle ----------------------------------------------------
     def alloc(self, tr, size: float, links: tuple[int, ...]) -> int:
@@ -242,6 +245,43 @@ class NetworkEngine:
         p = self._pair_paths
         valid = p >= 0
         return np.where(valid, share[np.maximum(p, 0)], np.inf).min(axis=-1)
+
+    def point_bandwidth_columns(self, dsts) -> np.ndarray:
+        """Destination columns of :meth:`point_bandwidth_matrix`:
+        ``B[h, p]`` = :meth:`point_bandwidth` ``(h, dsts[p])``, without
+        materializing the full ``(sites, sites)`` matrix. The batched
+        replica planners (``strategy_mode="batch"``) read one column per
+        (job, missing-file) pair each arrival burst, so this is their
+        per-burst cost: ``O(sites x pairs x depth)`` on the shared cached
+        path tensor."""
+        if self._pair_paths is None:
+            self._pair_paths = self.topology.pair_link_matrix()
+        share = self.link_bw / (self.link_act + 1.0)
+        d = np.asarray(dsts, np.intp)
+        # bursts repeat destinations (all of a job's files land on its
+        # site): gather the path tensor once per unique column, then
+        # replicate — pure indexing, bit-identical to the direct gather
+        u, inv = np.unique(d, return_inverse=True)
+        p = self._pair_paths[:, u, :]
+        cols = np.where(p >= 0, share[np.maximum(p, 0)], np.inf).min(axis=-1)
+        return cols[:, inv]
+
+    def point_bandwidth_column(self, dst: int) -> np.ndarray:
+        """One destination column, ``(sites,)`` — the singleton-replan
+        route of the batched planners. Same expression as
+        :meth:`point_bandwidth_columns` but sliced (no fancy-index copy
+        of the path tensor), so the values are bit-identical to
+        ``point_bandwidth_columns([dst])[:, 0]``."""
+        cached = self._col_paths.get(dst)
+        if cached is None:
+            if self._pair_paths is None:
+                self._pair_paths = self.topology.pair_link_matrix()
+            p = self._pair_paths[:, dst, :]
+            cached = (np.ascontiguousarray(np.maximum(p, 0)), p >= 0)
+            self._col_paths[dst] = cached
+        idx, valid = cached
+        share = self.link_bw / (self.link_act + 1.0)
+        return np.where(valid, share[idx], np.inf).min(axis=-1)
 
     # -- fluid model -------------------------------------------------------
     def advance(self, now: float) -> None:

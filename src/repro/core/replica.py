@@ -7,6 +7,20 @@ returned plan.
 
 Storage bookkeeping (LRU clocks, pinning of in-use files) lives in
 ``StorageState`` so strategies stay pure decision functions.
+
+Every strategy exists in two interchangeable forms:
+
+* the *sequential* classes below — one ``plan_fetch`` call per missing
+  file, walking holder lists and LRU orders in Python; and
+* the *batched* classes (``strategy_mode="batch"``, same registry keys) —
+  one ``plan_batch`` call per arrival burst that scores every (job,
+  missing-file) pair at once through the
+  :mod:`repro.kernels.strategy_plan` op (float64 numpy oracle on CPU, the
+  compiled Pallas kernel on TPU) and resolves eviction contents with
+  masked reductions over a :class:`StorageTensorView`, the dense array
+  mirror of catalog + SE state maintained cell-by-cell through change
+  listeners. On the CPU routes every batched plan is bit-identical to its
+  sequential twin (pinned by ``tests/test_batch_strategy.py``).
 """
 
 from __future__ import annotations
@@ -14,12 +28,14 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import itertools
+import weakref
 from typing import Iterable, Optional
 
 import numpy as np
 
 from .catalog import ReplicaCatalog
 from .topology import GridTopology
+from ..kernels.strategy_plan import strategy_plan
 
 
 @dataclasses.dataclass
@@ -58,6 +74,46 @@ class StorageState:
             s.site_id: [] for s in topology.sites
         }
         self._seq = 0
+        self._listeners: list[weakref.ref] = []
+
+    # -- change listeners ---------------------------------------------------
+    def add_listener(self, listener: object) -> None:
+        """Subscribe ``listener`` to SE mutations — the
+        :meth:`repro.core.catalog.ReplicaCatalog.add_listener` pattern for
+        storage state, so array mirrors (:class:`StorageTensorView`) track
+        LRU clocks and pins cell-by-cell instead of rescanning per burst.
+        It must provide ``on_storage_add(site, lfn, now, seq)``,
+        ``on_storage_touch(site, lfn, now)``, ``on_storage_remove(site,
+        lfn)`` and ``on_storage_pin(site, lfn, count)`` /
+        ``on_storage_unpin(site, lfn, count)``; each fires *after* the
+        mutation it reports. Held weakly; dead references are pruned on
+        registration."""
+        self._listeners = [r for r in self._listeners if r() is not None]
+        self._listeners.append(weakref.ref(listener))
+
+    def _notify(self, method: str, *args) -> None:
+        for ref in self._listeners:
+            sub = ref()
+            if sub is not None:
+                getattr(sub, method)(*args)
+
+    def __deepcopy__(self, memo: dict) -> "StorageState":
+        """Deep copy *without* listeners (the catalog's ``__deepcopy__``
+        contract): a copied store — the tie-race sanitizer's twin engine —
+        must never notify the original's mirrors."""
+        import copy
+
+        clone = self.__class__.__new__(self.__class__)
+        memo[id(self)] = clone
+        clone.catalog = copy.deepcopy(self.catalog, memo)
+        clone.topology = copy.deepcopy(self.topology, memo)
+        clone._contents = {s: dict(d) for s, d in self._contents.items()}
+        clone._pins = {s: dict(d) for s, d in self._pins.items()}
+        clone._add_seq = {s: dict(d) for s, d in self._add_seq.items()}
+        clone._lru = {s: list(l) for s, l in self._lru.items()}
+        clone._seq = self._seq
+        clone._listeners = []
+        return clone
 
     def _lru_insert(self, site: int, lfn: str, now: float) -> None:
         self._seq += 1
@@ -88,6 +144,7 @@ class StorageState:
         else:
             self._contents[site][lfn] = now
             self._lru_insert(site, lfn, now)
+            self._notify("on_storage_add", site, lfn, now, self._seq)
         st.used_storage += size
         self.catalog.add_replica(lfn, site)
 
@@ -99,6 +156,7 @@ class StorageState:
         else:
             self._contents[site][lfn] = now
             self._lru_insert(site, lfn, now)
+            self._notify("on_storage_add", site, lfn, now, self._seq)
         self.topology.sites[site].used_storage += self.catalog.size(lfn)
 
     def remove(self, site: int, lfn: str) -> None:
@@ -106,6 +164,7 @@ class StorageState:
         self._lru_discard(site, lfn)
         del self._contents[site][lfn]
         del self._add_seq[site][lfn]
+        self._notify("on_storage_remove", site, lfn)
         self.topology.sites[site].used_storage -= self.catalog.size(lfn)
         self.catalog.remove_replica(lfn, site)
 
@@ -125,9 +184,11 @@ class StorageState:
                     lst.pop(i)
                     bisect.insort(lst, (now, self._add_seq[site][lfn], lfn))
             self._contents[site][lfn] = now
+            self._notify("on_storage_touch", site, lfn, now)
 
     def pin(self, site: int, lfn: str) -> None:
         self._pins[site][lfn] = self._pins[site].get(lfn, 0) + 1
+        self._notify("on_storage_pin", site, lfn, self._pins[site][lfn])
 
     def unpin(self, site: int, lfn: str) -> None:
         n = self._pins[site].get(lfn, 0) - 1
@@ -135,6 +196,7 @@ class StorageState:
             self._pins[site].pop(lfn, None)
         else:
             self._pins[site][lfn] = n
+        self._notify("on_storage_unpin", site, lfn, max(n, 0))
 
     def is_pinned(self, site: int, lfn: str) -> bool:
         return self._pins[site].get(lfn, 0) > 0
@@ -157,6 +219,189 @@ class StorageState:
 
     def free(self, site: int) -> float:
         return self.topology.sites[site].free_storage
+
+
+class StorageTensorView:
+    """Dense array mirror of catalog + SE state for the batched planners.
+
+    One ``(sites, files)`` tensor bundle — catalog presence, per-region
+    holder counts, LRU clocks (``atime`` + insertion ``seq``, exactly the
+    :class:`StorageState` sort key) and pin counts — kept current
+    *cell-by-cell* through both change-listener channels
+    (:meth:`ReplicaCatalog.add_listener` and
+    :meth:`StorageState.add_listener`), so per-burst reductions never
+    rescan holder tables or LRU lists. File *registration* is absorbed
+    lazily: :meth:`sync` rebuilds the whole bundle when the catalog's file
+    count moved (the :class:`repro.core.jaxsched.JaxScheduler`
+    presence-bitmap pattern), and every public reader syncs first — the
+    SL012 coherence rule covers this class automatically.
+    """
+
+    def __init__(self, catalog: ReplicaCatalog, topology: GridTopology,
+                 storage: StorageState) -> None:
+        self.catalog = catalog
+        self.topology = topology
+        self.storage = storage
+        self._n_files = -1
+        self.sync()
+        catalog.add_listener(self)
+        storage.add_listener(self)
+
+    # -- rebuild / sync -----------------------------------------------------
+    def sync(self) -> None:
+        """Rebuild the file axis if files were registered since the last
+        build; no-op (one length check) otherwise."""
+        if len(self.catalog.files) != self._n_files:
+            self._rebuild()
+
+    def _rebuild(self) -> None:
+        cat, topo, store = self.catalog, self.topology, self.storage
+        lfns = sorted(cat.files)
+        self.lfns: list[str] = lfns
+        self.lfn_index: dict[str, int] = {l: j for j, l in enumerate(lfns)}
+        n_files, n_sites = len(lfns), topo.n_sites
+        self.sizes = np.fromiter((cat.size(l) for l in lfns), np.float64,
+                                 n_files)
+        self.masters = np.fromiter((cat.files[l].master_site for l in lfns),
+                                   np.intp, n_files)
+        self.region_map = np.fromiter((topo.region_of(s)
+                                       for s in range(n_sites)),
+                                      np.intp, n_sites)
+        self.cat_present = np.zeros((n_sites, n_files), bool)
+        for j, lfn in enumerate(lfns):
+            self.cat_present[sorted(cat.holders(lfn)), j] = True
+        self.region_counts = cat.region_counts_np(topo, lfns)
+        self.st_present = np.zeros((n_sites, n_files), bool)
+        self.st_atime = np.zeros((n_sites, n_files))
+        self.st_seq = np.zeros((n_sites, n_files), np.int64)
+        self.st_pins = np.zeros((n_sites, n_files), np.int64)
+        # owner-module read of the SE bookkeeping maps (coherence rule
+        # SL013 scopes them to this file, like SL011 does for the catalog)
+        for s in range(n_sites):
+            seqs = store._add_seq[s]
+            for lfn, atime in store._contents[s].items():
+                j = self.lfn_index[lfn]
+                self.st_present[s, j] = True
+                self.st_atime[s, j] = atime
+                self.st_seq[s, j] = seqs[lfn]
+            for lfn, n_pins in store._pins[s].items():
+                self.st_pins[s, self.lfn_index[lfn]] = n_pins
+        self._n_files = n_files
+
+    # -- catalog listener channel -------------------------------------------
+    def on_register_file(self, lfn: str) -> None:
+        pass                      # file-count change; next sync() rebuilds
+
+    def on_add_replica(self, lfn: str, site: int) -> None:
+        j = self.lfn_index.get(lfn)
+        if j is None:
+            return                # registered after last rebuild
+        # the catalog notifies idempotent mutations too — guard the count
+        # increment with our own presence cell, like the catalog's
+        # internal `if site not in holders`
+        if not self.cat_present[site, j]:
+            self.cat_present[site, j] = True
+            self.region_counts[self.region_map[site], j] += 1
+
+    def on_remove_replica(self, lfn: str, site: int) -> None:
+        j = self.lfn_index.get(lfn)
+        if j is None:
+            return
+        if self.cat_present[site, j]:
+            self.cat_present[site, j] = False
+            self.region_counts[self.region_map[site], j] -= 1
+
+    # -- storage listener channel -------------------------------------------
+    def on_storage_add(self, site: int, lfn: str, now: float,
+                       seq: int) -> None:
+        j = self.lfn_index.get(lfn)
+        if j is None:
+            return
+        self.st_present[site, j] = True
+        self.st_atime[site, j] = now
+        self.st_seq[site, j] = seq
+
+    def on_storage_touch(self, site: int, lfn: str, now: float) -> None:
+        j = self.lfn_index.get(lfn)
+        if j is not None:
+            self.st_atime[site, j] = now
+
+    def on_storage_remove(self, site: int, lfn: str) -> None:
+        j = self.lfn_index.get(lfn)
+        if j is None:
+            return
+        self.st_present[site, j] = False
+        self.st_pins[site, j] = 0     # `lose` drops pins without unpinning
+
+    def on_storage_pin(self, site: int, lfn: str, count: int) -> None:
+        j = self.lfn_index.get(lfn)
+        if j is not None:
+            self.st_pins[site, j] = count
+
+    def on_storage_unpin(self, site: int, lfn: str, count: int) -> None:
+        j = self.lfn_index.get(lfn)
+        if j is not None:
+            self.st_pins[site, j] = count
+
+    # -- burst reads (used by the batched planners) -------------------------
+    def file_indices(self, lfns: "Iterable[str]") -> np.ndarray:
+        self.sync()
+        idx = self.lfn_index
+        lfns = list(lfns)
+        return np.fromiter((idx[l] for l in lfns), np.intp, len(lfns))
+
+    def fetch_mask(self, js: np.ndarray, online: np.ndarray) -> np.ndarray:
+        """``(sites, pairs)`` fetchable-holder mask for file columns
+        ``js``: online holders, plus the durable master rows regardless of
+        liveness — :meth:`ReplicaCatalog.fetchable_holders` as one gather."""
+        self.sync()
+        mask = self.cat_present[:, js] & online[:, None]
+        m = self.masters[js]
+        ar = np.arange(js.size)
+        mask[m, ar] = self.cat_present[m, js]
+        return mask
+
+    def local_mask(self, dsts: np.ndarray) -> np.ndarray:
+        """``(sites, pairs)``: site in the same region as ``dsts[p]``."""
+        self.sync()
+        return self.region_map[:, None] == self.region_map[dsts][None, :]
+
+    def lru_evictable(self, dst: int) -> np.ndarray:
+        """Evictable residents of ``dst`` (non-master, unpinned) as file
+        indices in LRU order — ``(atime, seq)`` ascending, the exact
+        :meth:`StorageState.lru_order` key (unique per cell, so the lfn
+        tie-break is never reached)."""
+        self.sync()
+        row = (self.st_present[dst] & (self.masters != dst)
+               & (self.st_pins[dst] == 0))
+        cand = np.flatnonzero(row)
+        if cand.size <= 1:
+            return cand
+        return cand[np.lexsort((self.st_seq[dst, cand],
+                                self.st_atime[dst, cand]))]
+
+    def region_dup(self, dst: int, js: np.ndarray) -> np.ndarray:
+        """Vector :meth:`ReplicaCatalog.duplicated_in_region`: some
+        *other* site in ``dst``'s region also holds file ``js[i]``."""
+        self.sync()
+        n = (self.region_counts[self.region_map[dst], js]
+             - self.cat_present[dst, js])
+        return n > 0
+
+    def refetch_costs(self, dst: int, js: np.ndarray, bw_col: np.ndarray,
+                      online: np.ndarray) -> np.ndarray:
+        """Seconds to re-stage each file (columns ``js``) at ``dst`` from
+        its best *other* fetchable holder — the vectorized
+        ``_AccessAwareStrategy._refetch_cost`` (``inf`` when no other copy
+        exists or its bandwidth is zero)."""
+        self.sync()
+        h = self.fetch_mask(js, online)
+        h[dst, :] = False
+        best = np.where(h, bw_col[:, None], -np.inf).max(axis=0,
+                                                         initial=-np.inf)
+        good = best > 0.0
+        return np.where(good, self.sizes[js] / np.where(good, best, 1.0),
+                        np.inf)
 
 
 def _best_bandwidth_source(
@@ -513,6 +758,441 @@ class NoReplicationStrategy(ReplicaStrategy):
                          inter_region=self.topology.is_inter_region(src, dst))
 
 
+# -- batched planners (strategy_mode="batch") ------------------------------
+
+class _BatchedStrategy(ReplicaStrategy):
+    """Shared machinery for the batched planners.
+
+    ``plan_batch`` scores one arrival burst — every (job, missing-file)
+    pair — in a single :func:`repro.kernels.strategy_plan.strategy_plan`
+    pass over the engine-shared bandwidth tensor
+    (:meth:`repro.core.network.NetworkEngine.point_bandwidth_columns`),
+    the :class:`StorageTensorView` presence/region masks and the decayed
+    serve loads, then assembles per-pair :class:`FetchPlan` objects with
+    the strategy-specific ``_assemble``. Eviction contents (two-phase LRU
+    order, retention-vs-refetch trades) are masked reductions over the
+    view, touching only the pairs whose no-eviction store verdict failed.
+    On the CPU routes each plan is bit-identical to the sequential twin
+    strategy's ``plan_fetch`` against the same state.
+    """
+
+    #: the simulator routes arrival bursts through ``plan_batch`` (and
+    #: calls ``invalidate_online`` from the failure-injection paths) when
+    #: this is set
+    batched = True
+    #: discount source bandwidth by decayed serving load (the
+    #: access-aware key); zero serve is an IEEE no-op division by 1.0,
+    #: so one kernel formula covers both key types
+    serve_weighted = False
+
+    def __init__(self, catalog: ReplicaCatalog, topology: GridTopology,
+                 storage: StorageState, access=None, *, network=None,
+                 view: Optional[StorageTensorView] = None,
+                 backend: str = "auto") -> None:
+        if network is None:
+            raise ValueError(
+                f"strategy_mode='batch' ({self.name!r}) plans off the "
+                "engine-shared NetworkEngine bandwidth state; pass "
+                "network=")
+        super().__init__(catalog, topology, storage, access)
+        self.network = network
+        self.view = view if view is not None else StorageTensorView(
+            catalog, topology, storage)
+        self.backend = backend
+        self._online: Optional[np.ndarray] = None
+
+    # -- engine hooks -------------------------------------------------------
+    def invalidate_online(self) -> None:
+        """Drop the cached online-site vector. The simulator calls this
+        from its failure/recovery paths; liveness changes are rare next
+        to fetches, so the vector is rebuilt lazily instead of per-site."""
+        self._online = None
+
+    def _online_mask(self) -> np.ndarray:
+        if self._online is None:
+            self._online = np.fromiter(
+                (s.online for s in self.topology.sites), bool,
+                self.topology.n_sites)
+        return self._online
+
+    # -- planning -----------------------------------------------------------
+    def plan_fetch(self, lfn: str, dst: int) -> FetchPlan:
+        """Singleton replan route (burst-cache misses, re-staging rounds,
+        event-broker singleton bursts): the exact :func:`strategy_plan`
+        oracle formulas inlined on 1-D views, skipping the pair-axis
+        gathers — bit-identical to ``plan_batch([(lfn, dst)])[0]``."""
+        view = self.view
+        view.sync()
+        j = view.lfn_index[lfn]
+        online = self._online_mask()
+        bw = self.network.point_bandwidth_column(dst)
+        fetchm = view.cat_present[:, j] & online
+        m = int(view.masters[j])
+        fetchm[m] = view.cat_present[m, j]
+        # serve = 0 divides by exactly 1.0 (IEEE no-op), same as the oracle
+        eff = (bw / (1.0 + self.access.serve_loads())
+               if self.serve_weighted else bw)
+        key_g = np.where(fetchm, eff, -1.0)
+        src_g = int(np.argmax(key_g))            # first max = lowest id
+        localm = view.region_map == view.region_map[dst]
+        fl = fetchm & localm
+        has_l = bool(fl.any())
+        src_l = int(np.argmax(np.where(fl, eff, -1.0))) if has_l else 0
+        inter_g = not bool(localm[src_g])
+        free = float(self.topology.sites[dst].free_storage)
+        size = float(view.sizes[j])
+        return self._assemble(lfn, dst, size, free, bw, src_g, src_l,
+                              has_l, inter_g, free >= size)
+
+    def refresh_plan(self, plan: FetchPlan) -> FetchPlan:
+        """Re-verdict a burst-cached plan whose store/eviction half went
+        stale while the source is still good (the simulator's
+        ``_live_plan`` guard). The default replans from scratch;
+        strategies whose ``_assemble`` verdict needs nothing beyond the
+        plan's own (src, inter_region) override with a source-preserving
+        re-verdict, skipping the bandwidth column and argmax entirely."""
+        return self.plan_fetch(plan.lfn, plan.dst)
+
+    def _reverdict(self, plan: FetchPlan) -> FetchPlan:
+        """Source-preserving :meth:`refresh_plan`: recompute free space
+        and rerun ``_assemble`` with the cached source standing in for
+        both the global and local pick. Only valid for strategies whose
+        every ``_assemble`` branch encodes ``has_l`` as
+        ``not inter_region`` (or ignores it) and never reads the
+        bandwidth column."""
+        view = self.view
+        view.sync()
+        size = float(view.sizes[view.lfn_index[plan.lfn]])
+        free = float(self.topology.sites[plan.dst].free_storage)
+        return self._assemble(plan.lfn, plan.dst, size, free, None,
+                              plan.src, plan.src, not plan.inter_region,
+                              plan.inter_region, free >= size)
+
+    def plan_batch(self, pairs: list[tuple[str, int]]) -> list[FetchPlan]:
+        """Plan every ``(lfn, dst)`` pair of one burst in one pass."""
+        view = self.view
+        view.sync()
+        n = len(pairs)
+        js = view.file_indices(l for l, _ in pairs)
+        dsts = np.fromiter((d for _, d in pairs), np.intp, n)
+        online = self._online_mask()
+        bw = self.network.point_bandwidth_columns(dsts)
+        fetch = view.fetch_mask(js, online)
+        local = view.local_mask(dsts)
+        serve = (self.access.serve_loads() if self.serve_weighted
+                 else np.zeros(self.topology.n_sites))
+        free = np.fromiter(
+            (self.topology.sites[d].free_storage for d in dsts),
+            np.float64, n)
+        size = view.sizes[js]
+        src_g, src_l, has_l, inter_g, store_ok = strategy_plan(
+            bw, fetch, local, serve, free, size, backend=self.backend)
+        # pre-compute the LRU eviction lists for every pair whose verdict
+        # needs one, rowwise across the burst instead of per pair
+        evs: dict[int, list[str]] = {}
+        mask = self._evict_mask(has_l, store_ok)
+        if mask is not None and mask.any():
+            rows = np.flatnonzero(mask)
+            evs = dict(zip(
+                rows.tolist(),
+                self._lru_evictions_multi(dsts[rows], size[rows],
+                                          free[rows],
+                                          two_phase=self.two_phase)))
+        return [
+            self._assemble(pairs[p][0], int(dsts[p]), float(size[p]),
+                           float(free[p]), bw[:, p], int(src_g[p]),
+                           int(src_l[p]), bool(has_l[p]), bool(inter_g[p]),
+                           bool(store_ok[p]), evictions=evs.get(p))
+            for p in range(n)
+        ]
+
+    #: eviction-order flavor consumed by ``_evict_mask`` pre-computation
+    #: (HRS's region-duplicated-first order when True)
+    two_phase = False
+
+    def _evict_mask(self, has_l: np.ndarray,
+                    store_ok: np.ndarray) -> Optional[np.ndarray]:
+        """Which pairs of a burst need an LRU eviction list pre-computed
+        (``None``: the strategy plans evictions itself per pair — the
+        access-aware trade rules)."""
+        return None
+
+    def _assemble(self, lfn: str, dst: int, size: float, free: float,
+                  bw_col: np.ndarray, src_g: int, src_l: int, has_l: bool,
+                  inter_g: bool, store_ok: bool,
+                  evictions: Optional[list[str]] = None) -> FetchPlan:
+        raise NotImplementedError
+
+    # Vectorized ``_evict_until`` over a pre-filtered eviction order:
+    # left-to-right cumulative frees (``np.cumsum`` accumulates in
+    # sequence, matching the sequential ``freed += size`` association
+    # order bit for bit), evict up to the first prefix that covers
+    # ``need`` — or nothing when even the full order cannot.
+    def _lru_evictions(self, dst: int, need: float, free: float, *,
+                       two_phase: bool = False) -> list[str]:
+        view = self.view
+        order = view.lru_evictable(dst)
+        if order.size == 0:
+            return []
+        if two_phase:
+            dup = view.region_dup(dst, order)
+            order = np.concatenate((order[dup], order[~dup]))
+        freed = np.cumsum(np.concatenate(([free], view.sizes[order])))
+        hit = np.flatnonzero(freed >= need)
+        if hit.size == 0:
+            return []
+        return [view.lfns[int(i)] for i in order[:int(hit[0])]]
+
+    # `_lru_evictions` for a whole burst. All of a job's files land on
+    # its site, so the burst's eviction-needing pairs share a handful of
+    # destinations: build each destination's LRU order and cumulative
+    # free-space prefix ONCE (the exact singleton arrays — same
+    # lexsort, same two-phase partition, same left-assoc cumsum with the
+    # free space prepended), then cut each pair at its own first covering
+    # prefix. ``freed`` is nondecreasing (sizes are nonnegative), so the
+    # left bisect equals the singleton's first ``freed >= need`` index.
+    def _lru_evictions_multi(self, dsts: np.ndarray, needs: np.ndarray,
+                             frees: np.ndarray, *,
+                             two_phase: bool = False) -> list[list[str]]:
+        view = self.view
+        out: list[list[str]] = [[] for _ in range(len(dsts))]
+        lfns = view.lfns
+        for dst in np.unique(dsts):
+            rows = np.flatnonzero(dsts == dst)
+            order = view.lru_evictable(int(dst))
+            if order.size == 0:
+                continue
+            if two_phase:
+                dup = view.region_dup(int(dst), order)
+                order = np.concatenate((order[dup], order[~dup]))
+            sizes_o = view.sizes[order]
+            # one prefix per distinct free-space reading (one in practice:
+            # the burst snapshots every pair's free space at the same
+            # instant, but the grouping must not assume it)
+            for free in np.unique(frees[rows]):
+                sub = rows[frees[rows] == free]
+                freed = np.cumsum(np.concatenate(([free], sizes_o)))
+                cuts = np.searchsorted(freed, needs[sub], side="left")
+                for p, cut in zip(sub, cuts):
+                    if cut < freed.size:
+                        out[p] = [lfns[int(i)] for i in order[:int(cut)]]
+        return out
+
+
+class BatchedHRSStrategy(_BatchedStrategy):
+    """Batched :class:`HRSStrategy` (region priority, temp-buffer
+    fallback, two-phase LRU eviction)."""
+
+    name = "hrs"
+    two_phase = True
+
+    def _evict_mask(self, has_l, store_ok):
+        return ~(has_l | store_ok)
+
+    def _assemble(self, lfn, dst, size, free, bw_col, src_g, src_l, has_l,
+                  inter_g, store_ok, evictions=None):
+        if has_l:
+            return FetchPlan(lfn, src_l, dst, store=store_ok, evictions=[],
+                             inter_region=False)
+        if store_ok:
+            return FetchPlan(lfn, src_g, dst, store=True, evictions=[],
+                             inter_region=True)
+        if evictions is None:
+            evictions = self._lru_evictions(dst, size, free,
+                                            two_phase=self.two_phase)
+        if evictions:
+            return FetchPlan(lfn, src_g, dst, store=True,
+                             evictions=evictions, inter_region=True)
+        return FetchPlan(lfn, src_g, dst, store=False, evictions=[],
+                         inter_region=True)
+
+    # every branch above maps has_l <-> not inter_region and ignores the
+    # bandwidth column, so the cheap source-preserving re-verdict applies
+    refresh_plan = _BatchedStrategy._reverdict
+
+
+class BatchedHRSSinglePhaseStrategy(BatchedHRSStrategy):
+    """Batched :class:`HRSSinglePhaseStrategy` (eviction ablation)."""
+
+    name = "hrs_singlephase"
+    two_phase = False
+
+
+class BatchedBHRStrategy(_BatchedStrategy):
+    """Batched :class:`BHRStrategy` (in-region remote access, plain
+    LRU eviction)."""
+
+    name = "bhr"
+
+    def _evict_mask(self, has_l, store_ok):
+        return ~(has_l | store_ok)
+
+    def _assemble(self, lfn, dst, size, free, bw_col, src_g, src_l, has_l,
+                  inter_g, store_ok, evictions=None):
+        if store_ok:
+            return FetchPlan(lfn, src_g, dst, store=True, evictions=[],
+                             inter_region=inter_g)
+        if has_l:
+            return FetchPlan(lfn, src_l, dst, store=False, evictions=[],
+                             inter_region=False, remote_access=True)
+        if evictions is None:
+            evictions = self._lru_evictions(dst, size, free)
+        if evictions:
+            return FetchPlan(lfn, src_g, dst, store=True,
+                             evictions=evictions, inter_region=inter_g)
+        return FetchPlan(lfn, src_g, dst, store=False, evictions=[],
+                         inter_region=inter_g)
+
+
+class BatchedLRUStrategy(_BatchedStrategy):
+    """Batched :class:`LRUStrategy` (always replicate, plain LRU)."""
+
+    name = "lru"
+
+    def _evict_mask(self, has_l, store_ok):
+        return ~store_ok
+
+    def _assemble(self, lfn, dst, size, free, bw_col, src_g, src_l, has_l,
+                  inter_g, store_ok, evictions=None):
+        if store_ok:
+            return FetchPlan(lfn, src_g, dst, store=True, evictions=[],
+                             inter_region=inter_g)
+        if evictions is None:
+            evictions = self._lru_evictions(dst, size, free)
+        if evictions:
+            return FetchPlan(lfn, src_g, dst, store=True,
+                             evictions=evictions, inter_region=inter_g)
+        return FetchPlan(lfn, src_g, dst, store=False, evictions=[],
+                         inter_region=inter_g)
+
+    # src_g-only planning, has_l unused: the cheap re-verdict applies
+    refresh_plan = _BatchedStrategy._reverdict
+
+
+class BatchedNoReplicationStrategy(_BatchedStrategy):
+    """Batched :class:`NoReplicationStrategy` (stream, never store)."""
+
+    name = "noreplication"
+
+    def _assemble(self, lfn, dst, size, free, bw_col, src_g, src_l, has_l,
+                  inter_g, store_ok, evictions=None):
+        return FetchPlan(lfn, src_g, dst, store=False, evictions=[],
+                         inter_region=inter_g)
+
+    def refresh_plan(self, plan):
+        return plan          # never stores: nothing to re-verdict
+
+
+class _BatchedAccessAwareStrategy(_BatchedStrategy):
+    """Batched counterpart of :class:`_AccessAwareStrategy`: guaranteed
+    non-None ``access``, serve-load-discounted source keys, and the
+    vectorized retention-vs-refetch eviction trade."""
+
+    uses_economy = True
+    serve_weighted = True
+
+    def __init__(self, catalog, topology, storage, access=None,
+                 **kwargs) -> None:
+        if access is None:
+            from .access import AccessHistory   # deferred: avoid cycle cost
+            access = AccessHistory(catalog, topology)
+        super().__init__(catalog, topology, storage, access, **kwargs)
+
+    def _trade_evictions(self, dst: int, size: float, free: float,
+                         value_in: float, resident: np.ndarray,
+                         res_lfns: list[str],
+                         values: np.ndarray) -> Optional[list[str]]:
+        """Vectorized ``_AccessAwareStrategy._plan_trade`` core: evict
+        cheapest-retention-value first up to the first prefix that covers
+        ``size``, store only while the incoming value stays strictly
+        ahead of the total evicted. Returns the eviction list for a
+        winning trade, ``None`` for a losing or unfillable one."""
+        view = self.view
+        order = np.argsort(values, kind="stable")
+        freed = np.cumsum(np.concatenate(
+            ([free], view.sizes[resident[order]])))
+        space = np.flatnonzero(freed >= size)
+        if space.size == 0:
+            return None
+        k = int(space[0])          # >= 1: free < size on this path
+        # the sequential loop's `value_out < value_in` gate. Retention
+        # values are nonnegative, so the running sum is nondecreasing and
+        # this one compare also covers its early value-break; a NaN sum
+        # (inf refetch cost x zero score) fails the compare — a failed
+        # trade, exactly like the sequential accumulator
+        cum_v = np.cumsum(values[order])
+        if not cum_v[k - 1] < value_in:
+            return None
+        return [res_lfns[int(i)] for i in order[:k]]
+
+
+class BatchedPredictiveStrategy(_BatchedAccessAwareStrategy):
+    """Batched :class:`PredictiveStrategy` (popularity trade, sole-copy
+    retention weighting, region-local source priority)."""
+
+    name = "predictive"
+    econ_model = "popularity"
+    sole_copy_weight = PredictiveStrategy.sole_copy_weight
+
+    def _assemble(self, lfn, dst, size, free, bw_col, src_g, src_l, has_l,
+                  inter_g, store_ok, evictions=None):
+        src = src_l if has_l else src_g
+        inter = False if has_l else inter_g
+        if store_ok:
+            return FetchPlan(lfn, src, dst, store=True, evictions=[],
+                             inter_region=inter)
+        view = self.view
+        resident = view.lru_evictable(dst)
+        res_lfns = [view.lfns[int(i)] for i in resident]
+        scores = self.access.scores(dst, res_lfns)
+        dup = view.region_dup(dst, resident)
+        values = np.where(dup, scores, self.sole_copy_weight * scores)
+        score_in = float(self.access.scores(dst, [lfn])[0])
+        evictions = self._trade_evictions(dst, size, free, score_in,
+                                          resident, res_lfns, values)
+        if evictions is None:
+            return FetchPlan(lfn, src, dst, store=False, evictions=[],
+                             inter_region=inter)
+        return FetchPlan(lfn, src, dst, store=True, evictions=evictions,
+                         inter_region=inter)
+
+    # local source => inter_region False in every branch, bandwidth
+    # column unused: the cheap source-preserving re-verdict applies
+    refresh_plan = _BatchedStrategy._reverdict
+
+
+class BatchedEconomicStrategy(_BatchedAccessAwareStrategy):
+    """Batched :class:`EconomicStrategy` (OptorSim valuation: predicted
+    accesses x transfer cost, against refetch-priced retention)."""
+
+    name = "economic"
+    econ_model = "economic"
+
+    def _assemble(self, lfn, dst, size, free, bw_col, src_g, src_l, has_l,
+                  inter_g, store_ok, evictions=None):
+        if store_ok:
+            return FetchPlan(lfn, src_g, dst, store=True, evictions=[],
+                             inter_region=inter_g)
+        view = self.view
+        resident = view.lru_evictable(dst)
+        res_lfns = [view.lfns[int(i)] for i in resident]
+        scores = self.access.scores(dst, res_lfns)
+        refetch = view.refetch_costs(dst, resident, bw_col,
+                                     self._online_mask())
+        values = scores * refetch
+        score_in = float(self.access.scores(dst, [lfn])[0])
+        bw_sd = float(bw_col[src_g])
+        value_in = score_in * (size / bw_sd if bw_sd > 0.0
+                               else float("inf"))
+        evictions = self._trade_evictions(dst, size, free, value_in,
+                                          resident, res_lfns, values)
+        if evictions is None:
+            return FetchPlan(lfn, src_g, dst, store=False, evictions=[],
+                             inter_region=inter_g)
+        return FetchPlan(lfn, src_g, dst, store=True, evictions=evictions,
+                         inter_region=inter_g)
+
+
 #: Replication-strategy registry, keyed by each strategy's ``name``
 #: attribute: ``hrs`` (the paper's contribution), ``hrs_singlephase``
 #: (eviction ablation), ``bhr``, ``lru``, ``noreplication``, plus the
@@ -526,16 +1206,44 @@ STRATEGIES: dict[str, type[ReplicaStrategy]] = {
                         EconomicStrategy, PredictiveStrategy)
 }
 
+#: Planning engines accepted by :func:`make_strategy` / ``GridSimulator``'s
+#: ``strategy_mode`` flag.
+STRATEGY_MODES = ("sequential", "batch")
+
+#: ``strategy_mode="batch"`` counterparts — same keys, every strategy has
+#: a batched twin that plans whole arrival bursts in one
+#: :mod:`repro.kernels.strategy_plan` pass.
+BATCH_STRATEGIES: dict[str, type[_BatchedStrategy]] = {
+    c.name: c for c in (BatchedHRSStrategy, BatchedHRSSinglePhaseStrategy,
+                        BatchedBHRStrategy, BatchedLRUStrategy,
+                        BatchedNoReplicationStrategy,
+                        BatchedEconomicStrategy, BatchedPredictiveStrategy)
+}
+
 
 def make_strategy(name: str, catalog: ReplicaCatalog, topology: GridTopology,
-                  storage: StorageState, access=None) -> ReplicaStrategy:
-    """Instantiate a replication strategy from :data:`STRATEGIES` by name.
+                  storage: StorageState, access=None, *,
+                  mode: str = "sequential", network=None,
+                  backend: str = "auto") -> ReplicaStrategy:
+    """Instantiate a replication strategy from :data:`STRATEGIES` (or,
+    with ``mode="batch"``, :data:`BATCH_STRATEGIES`) by name.
 
     Strategies are pure decision functions over the shared ``catalog`` /
     ``topology`` / ``storage`` state — the simulator executes the
     :class:`FetchPlan` they return. ``access`` is the shared
     :class:`repro.core.access.AccessHistory` (the access-aware strategies
-    build a private empty one when omitted, e.g. in unit tests). Raises
-    ``KeyError`` for unknown names.
+    build a private empty one when omitted, e.g. in unit tests). The
+    batched planners additionally need the engine's
+    :class:`repro.core.network.NetworkEngine` as ``network``; ``backend``
+    routes their :mod:`repro.kernels.strategy_plan` pass
+    (``"auto"``: the float64 numpy oracle on CPU, the compiled Pallas
+    kernel on TPU). Raises ``KeyError`` for unknown names, ``ValueError``
+    for unknown modes.
     """
-    return STRATEGIES[name](catalog, topology, storage, access)
+    if mode == "sequential":
+        return STRATEGIES[name](catalog, topology, storage, access)
+    if mode != "batch":
+        raise ValueError(f"unknown strategy_mode {mode!r} "
+                         "(want 'sequential' | 'batch')")
+    return BATCH_STRATEGIES[name](catalog, topology, storage, access,
+                                  network=network, backend=backend)

@@ -106,6 +106,10 @@ class _JobState:
     remaining_ops: float = 0.0
     rounds: int = 0                      # staging rounds (re-fetch after eviction)
     pin_on_arrival: bool = False         # anti-livelock escalation
+    # burst-planned fetches awaiting execution (strategy_mode="batch"):
+    # one FetchPlan per still-missing file, consumed by _fetch_next
+    plan_cache: dict[str, "FetchPlan"] = dataclasses.field(
+        default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -161,6 +165,7 @@ class GridSimulator:
         *,
         scheduler: str | SchedulerPolicy = "dataaware",
         strategy: str | ReplicaStrategy = "hrs",
+        strategy_mode: str = "sequential",
         seed: int = 0,
         speculative_backups: bool = False,
         straggler_threshold: float = 3.0,
@@ -178,24 +183,6 @@ class GridSimulator:
             scheduler if isinstance(scheduler, SchedulerPolicy)
             else make_scheduler(scheduler, catalog, topology, seed=seed)
         )
-        # access history: pure observation, fed from the fetch/hit path
-        # below. Shared with the strategy (the access-aware ones consult
-        # it) and the replication economy (which acts on it).
-        if isinstance(strategy, ReplicaStrategy):
-            self.strategy = strategy
-            if strategy.access is not None:
-                self.access = strategy.access   # adopt: one shared history
-            else:
-                self.access = AccessHistory(catalog, topology)
-                strategy.access = self.access
-        else:
-            self.access = AccessHistory(catalog, topology)
-            self.strategy = make_strategy(strategy, catalog, topology,
-                                          self.storage, self.access)
-        self.rng = _random.Random(seed)
-        self.speculative_backups = speculative_backups
-        self.straggler_threshold = straggler_threshold
-        self.batch_window = batch_window
         if net not in NETS:
             raise ValueError(f"unknown net engine {net!r} (want one of {NETS})")
         if net == "topmost":
@@ -213,7 +200,37 @@ class GridSimulator:
                     "path_model='topmost'), or run_experiment(net="
                     "'topmost') which does this for you)")
             net = "numpy"
+        # the network engine is built before the strategy: the batched
+        # planners (strategy_mode="batch") read their per-burst bandwidth
+        # columns from its shared link state
         self.network = NetworkEngine(topology, backend=net)
+        # access history: pure observation, fed from the fetch/hit path
+        # below. Shared with the strategy (the access-aware ones consult
+        # it) and the replication economy (which acts on it).
+        if isinstance(strategy, ReplicaStrategy):
+            if strategy_mode != "sequential":
+                raise ValueError(
+                    "strategy_mode applies to strategies built by name; "
+                    "pass the registry name instead of an instance")
+            self.strategy = strategy
+            if strategy.access is not None:
+                self.access = strategy.access   # adopt: one shared history
+            else:
+                self.access = AccessHistory(catalog, topology)
+                strategy.access = self.access
+        else:
+            self.access = AccessHistory(catalog, topology)
+            self.strategy = make_strategy(strategy, catalog, topology,
+                                          self.storage, self.access,
+                                          mode=strategy_mode,
+                                          network=self.network)
+        # batched planners consume whole arrival bursts (`_batch_fetch`)
+        # and cache an online-site vector the failure paths invalidate
+        self._batched_strategy = getattr(self.strategy, "batched", False)
+        self.rng = _random.Random(seed)
+        self.speculative_backups = speculative_backups
+        self.straggler_threshold = straggler_threshold
+        self.batch_window = batch_window
         # -- replication economy (proactive, periodic; off by default) ----
         # econ_interval=None means "auto": the strategies that declare
         # uses_economy arm the optimizer at the default period, everything
@@ -275,10 +292,15 @@ class GridSimulator:
         # canonicalized observable states are compared. Requires the
         # sequential broker: twins deep-copy the whole engine, and the jax
         # brokers hold device buffers + catalog listeners that a twin must
-        # not share (ReplicaCatalog.__deepcopy__ drops listeners).
-        if sanitize and self._jax_broker is not None:
-            raise ValueError("sanitize=True requires broker='event' "
-                             "(twin replay deep-copies the engine)")
+        # not share (ReplicaCatalog.__deepcopy__ drops listeners). The
+        # batched planners are excluded for the same reason: their
+        # StorageTensorView rides both listener channels, which the
+        # catalog/storage ``__deepcopy__`` contracts deliberately drop.
+        if sanitize and (self._jax_broker is not None
+                         or self._batched_strategy):
+            raise ValueError("sanitize=True requires broker='event' and "
+                             "strategy_mode='sequential' (twin replay "
+                             "deep-copies the engine, dropping listeners)")
         self.sanitize = sanitize
         self.ties_seen = 0
         self.tie_races: list[TieRace] = []
@@ -478,7 +500,8 @@ class GridSimulator:
     def _schedule(self, job: Job) -> None:
         self._place(job, self.scheduler.select_site(job))
 
-    def _place(self, job: Job, site: int) -> None:
+    def _place(self, job: Job, site: int, *,
+               defer_fetch: bool = False) -> _JobState:
         js = _JobState(job=job, site=site, remaining_ops=job.length)
         self._site_jobs[site][js] = None
         self.topology.sites[site].queued_work += job.length
@@ -492,7 +515,9 @@ class GridSimulator:
             self.access.record_access(site, lfn, self.now)
             if lfn not in js.missing:
                 self.access.record_hit(site, lfn, self.now)
-        self._fetch_next(js)
+        if not defer_fetch:
+            self._fetch_next(js)
+        return js
 
     def _drain_submit_batch(self, first: Job) -> list[Job]:
         """Batch broker: pull every SUBMIT event sharing this timestamp off
@@ -510,20 +535,40 @@ class GridSimulator:
             return
         assert self._jax_broker is not None
         sites = self._jax_broker.select_batch([j.required for j in batch])
-        for job, site in zip(batch, sites):
-            self._place(job, site)
+        if self._batched_strategy:
+            # burst-level plan consumption: place everything first, then
+            # plan every job's first fetch in one strategy_plan pass
+            jss = [self._place(job, site, defer_fetch=True)
+                   for job, site in zip(batch, sites)]
+            self._batch_fetch(jss)
+        else:
+            for job, site in zip(batch, sites):
+                self._place(job, site)
+
+    def _next_missing(self, js: _JobState) -> Optional[str]:
+        """Pop ``js.missing`` down to its first file that still needs a
+        transfer (touching anything that already arrived, like the
+        sequential scan always did); ``None`` when nothing is left."""
+        while js.missing:
+            lfn = js.missing.pop(0)
+            if self.storage.holds(js.site, lfn):
+                self.storage.touch(js.site, lfn, self.now)
+                continue
+            return lfn
+        return None
 
     def _fetch_next(self, js: _JobState) -> None:
         """Files are accessed sequentially within a job (paper §4.1): one
         transfer in flight per job."""
         if js.done:
             return
-        while js.missing:
-            lfn = js.missing.pop(0)
-            if self.storage.holds(js.site, lfn):
-                self.storage.touch(js.site, lfn, self.now)
-                continue
-            plan = self.strategy.plan_fetch(lfn, js.site)
+        lfn = self._next_missing(js)
+        if lfn is not None:
+            plan = js.plan_cache.pop(lfn, None)
+            if plan is not None:
+                plan = self._live_plan(plan)
+            if plan is None:
+                plan = self.strategy.plan_fetch(lfn, js.site)
             js.pending_transfers += 1
             self._start_transfer(plan, js)
             return
@@ -531,6 +576,65 @@ class GridSimulator:
             if js.data_ready_time < 0:
                 js.data_ready_time = self.now
             self._enqueue_cpu(js)
+
+    def _batch_fetch(self, jss: list[_JobState]) -> None:
+        """Strategy-mode ``"batch"``: plan EVERY (job, missing-file) fetch
+        of the burst in one ``plan_batch`` pass and cache the plans on
+        each job, so the whole staging chain — not just the first file —
+        rides the vectorized planner. ``_fetch_next`` consumes the cache
+        one transfer at a time under the ``_live_plan`` guard — an
+        earlier plan in the burst (or any event between burst and
+        consumption) may take the space or the very replica a later plan
+        counted on (the shared-snapshot convention of the jax dispatch
+        brokers)."""
+        pairs = [(lfn, js.site) for js in jss for lfn in js.missing]
+        if pairs:
+            owners = (js for js in jss for _ in js.missing)
+            for js, (lfn, _), plan in zip(owners, pairs,
+                                          self.strategy.plan_batch(pairs)):
+                js.plan_cache[lfn] = plan
+        for js in jss:
+            self._fetch_next(js)
+
+    def _live_plan(self, plan: FetchPlan) -> Optional[FetchPlan]:
+        """Adapt a burst-cached plan to the live state: keep it while it
+        is still exactly executable, hand it to the strategy's cheap
+        ``refresh_plan`` when only its store/eviction verdict went stale
+        (earlier transfers moved the free space it was priced against),
+        and drop it entirely (``None`` — full singleton replan) when the
+        chosen source itself is gone or a cheaper class of source has
+        appeared (an inter-region plan whose file now has a regional
+        copy)."""
+        if plan.store and (plan.dst, plan.lfn) in self._inflight:
+            return plan      # piggybacks onto the in-flight transfer
+        if not self.catalog.has_replica(plan.lfn, plan.src):
+            return None      # the chosen source was evicted since the burst
+        if not (self.topology.sites[plan.src].online
+                or self.catalog.is_master(plan.lfn, plan.src)):
+            return None
+        if plan.inter_region and self.catalog.duplicated_in_region(
+                plan.lfn, plan.dst, self.topology):
+            return None      # a regional copy appeared since the burst:
+            # keeping the snapshot's WAN source would double-count
+            # inter-region traffic the sequential pipeline avoids
+        need = self.catalog.size(plan.lfn)
+        free = self.storage.free(plan.dst)
+        if plan.store and plan.evictions:
+            # planned evictions must still exist, still cover, and still
+            # be necessary (a file that fits outright now must not evict)
+            if (free < need
+                    and all(self.storage.holds(plan.dst, l)
+                            and self.storage.evictable(plan.dst, l)
+                            for l in plan.evictions)
+                    and free + sum(self.catalog.size(l)
+                                   for l in plan.evictions) >= need):
+                return plan
+        elif plan.store:
+            if free >= need:
+                return plan
+        elif free < need:    # store=False stays the right call only
+            return plan      # while the file cannot fit
+        return self.strategy.refresh_plan(plan)
 
     def _working_set_missing(self, js: _JobState) -> list[str]:
         return [f for f in js.job.required
@@ -663,6 +767,8 @@ class GridSimulator:
             return
         self._cpu_advance(site)
         st.online = False
+        if self._batched_strategy:
+            self.strategy.invalidate_online()
         self._abort_transfers_touching(site)
         # lose non-master replicas (the SE is gone); masters are durable
         for lfn in self.storage.site_contents(site):
@@ -688,6 +794,8 @@ class GridSimulator:
 
     def _recover_site(self, site: int) -> None:
         self.topology.sites[site].online = True
+        if self._batched_strategy:
+            self.strategy.invalidate_online()
         self._maybe_start_cpu(site)
 
     def _watchdog(self, js: _JobState) -> None:
@@ -886,7 +994,7 @@ class GridSimulator:
             for r in self.records)
         d["sites"] = [(s.site_id, s.online, s.used_storage, s.queued_work,
                        s.compute_capacity) for s in self.topology.sites]
-        d["storage"] = [sorted(self.storage._contents[s.site_id])
+        d["storage"] = [sorted(self.storage.site_contents(s.site_id))
                         for s in self.topology.sites]
         d["catalog"] = [(lfn, sorted(self.catalog.holders(lfn)))
                         for lfn in self.catalog.files]

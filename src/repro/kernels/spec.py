@@ -163,6 +163,25 @@ def _st_cost_inputs(sites: int, files: int, jobs: int,
     return (args, {})
 
 
+def _strategy_plan_inputs(sites: int, pairs: int, seed: int = 2) -> InputCase:
+    rng = np.random.default_rng(seed)
+    bw = rng.random((sites, pairs)) * 1.25e8 + 1e5
+    fetch = rng.random((sites, pairs)) < 0.15
+    fetch[rng.integers(0, sites, pairs), np.arange(pairs)] = True
+    # region-block structure: contiguous site ranges share a region, each
+    # pair's destination region is one of them
+    n_regions = max(2, sites // 8)
+    region = np.arange(sites) * n_regions // sites
+    local = region[:, None] == rng.integers(0, n_regions, pairs)[None, :]
+    serve = np.where(rng.random(sites) < 0.5, rng.random(sites) * 9.0, 0.0)
+    size = rng.random(pairs) * 1e9 + 1e6
+    free = np.where(rng.random(pairs) < 0.5,
+                    rng.random(pairs) * 2e9, rng.random(pairs) * 1e8)
+    args = tuple(np.asarray(a, np.float32)
+                 for a in (bw, fetch, local, serve, free, size))
+    return (args, {})
+
+
 def _selective_scan_inputs(Bz: int, S: int, Di: int, N: int,
                            seed: int = 2) -> InputCase:
     rng = np.random.default_rng(seed)
@@ -214,6 +233,15 @@ ST_COST_SPEC = KernelSpec(
     domain="sim", max_rank=2, budget_bytes=450_000,
     make_inputs=lambda: _st_cost_inputs(52, 100, 50),
     make_small_inputs=lambda: _st_cost_inputs(8, 24, 5),
+)
+
+STRATEGY_PLAN_SPEC = KernelSpec(
+    name="strategy_plan", module="repro.kernels.strategy_plan",
+    kernel_attr="strategy_plan_kernel", ref_attr="strategy_plan_ref",
+    domain="sim", max_rank=2, budget_bytes=1_100_000,
+    make_inputs=lambda: _strategy_plan_inputs(500, 50),
+    make_small_inputs=lambda: _strategy_plan_inputs(24, 7),
+    multi_output=True,
 )
 
 VALUE_SCORE_SPEC = KernelSpec(

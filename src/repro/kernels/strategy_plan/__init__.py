@@ -1,0 +1,9 @@
+"""Batched replica-strategy plan pass: sources, region classification and
+store verdicts for every (job, missing-file) pair of one arrival burst
+(float64 oracle / Pallas TPU kernel). Jax-free to import."""
+
+from ..spec import STRATEGY_PLAN_SPEC as SPEC
+from .ops import strategy_plan
+from .ref import strategy_plan_ref
+
+__all__ = ["SPEC", "strategy_plan", "strategy_plan_ref"]

@@ -1,0 +1,76 @@
+"""Public wrapper for the replica-strategy plan pass (pallas / interpret /
+numpy).
+
+Like ``st_cost``, this op is called from host code (the batched planner
+classes in :mod:`repro.core.replica`, once per arrival burst and per
+singleton replan), so it takes and returns host numpy values and picks
+the route per call:
+
+  * ``"auto"``   — the compiled Pallas kernel on TPU; the float64 numpy
+    oracle on CPU (no per-burst jax dispatch overhead, bit-identical to
+    the oracle trivially). This is what ``strategy_mode="batch"`` uses.
+  * ``"pallas"`` — force the compiled kernel. Compiled TPU execution is
+    float32 (no f64 on TPU): site picks can drift on near-tie effective
+    bandwidths, so the bit-identity contract covers the CPU routes only.
+  * ``"interpret"`` — the kernel under the Pallas interpreter with x64
+    enabled: slow, bit-identical to the oracle; used by the kernel tests.
+  * ``"numpy"``  — the oracle directly.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .ref import strategy_plan_ref
+
+
+def strategy_plan(bw, fetch, local, serve, free, size, *,
+                  backend: str = "auto"
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                             np.ndarray, np.ndarray]:
+    """Plan one burst of (job, missing-file) pairs.
+
+    See :func:`.ref.strategy_plan_ref` for the argument contract.
+    Returns host ``(src_global, src_local, has_local, inter_global,
+    store_ok)`` with decision dtypes (``intp`` site ids, ``bool`` flags)
+    regardless of backend.
+    """
+    if backend in ("auto", "pallas", "interpret"):
+        import jax
+
+        if backend == "pallas" or (backend == "auto"
+                                   and jax.default_backend() == "tpu"):
+            from .kernel import strategy_plan_kernel
+            out = strategy_plan_kernel(
+                np.asarray(bw, np.float32),
+                np.asarray(fetch, np.float32),
+                np.asarray(local, np.float32),
+                np.asarray(serve, np.float32),
+                np.asarray(free, np.float32),
+                np.asarray(size, np.float32))
+            return _decisions(*(np.asarray(o, np.float64) for o in out))
+        if backend == "interpret":
+            from jax.experimental import enable_x64
+
+            from .kernel import strategy_plan_kernel
+            with enable_x64():
+                out = strategy_plan_kernel(
+                    np.asarray(bw, np.float64),
+                    np.asarray(fetch, np.float64),
+                    np.asarray(local, np.float64),
+                    np.asarray(serve, np.float64),
+                    np.asarray(free, np.float64),
+                    np.asarray(size, np.float64), interpret=True)
+            return _decisions(*(np.asarray(o, np.float64) for o in out))
+        backend = "numpy"
+    if backend != "numpy":
+        raise ValueError(f"unknown strategy_plan backend {backend!r} "
+                         "(want 'auto'|'pallas'|'interpret'|'numpy')")
+    return _decisions(*strategy_plan_ref(bw, fetch, local, serve, free,
+                                         size))
+
+
+def _decisions(src_g, src_l, has_l, inter_g, store_ok):
+    """Float kernel outputs -> host decision dtypes."""
+    return (src_g.astype(np.intp), src_l.astype(np.intp),
+            has_l > 0.0, inter_g > 0.0, store_ok > 0.0)

@@ -52,6 +52,7 @@ def run_spec(spec: ScenarioSpec, *, seed: int | None = None,
         cfg, scheduler=spec.scheduler, strategy=spec.strategy, n_jobs=n,
         failures=failures or None, slowdowns=slowdowns or None,
         broker=spec.broker, batch_window=spec.batch_window_s,
+        strategy_mode=spec.strategy_mode,
         arrival_burst=spec.arrival_burst,
         arrival_times=arrival_schedule(spec, n, seed=seed),
         net=spec.net, econ=spec.econ, econ_interval=spec.econ_interval_s,

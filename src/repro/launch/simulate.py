@@ -17,7 +17,7 @@ import argparse
 import dataclasses
 
 from repro.core import (ChurnSpec, ECON_BACKENDS, SCENARIOS, STRATEGIES,
-                        SCHEDULERS, ScenarioSpec, get_scenario)
+                        STRATEGY_MODES, SCHEDULERS, ScenarioSpec, get_scenario)
 from repro.core.simulator import NETS
 from repro.launch.experiments import run_spec
 
@@ -44,6 +44,10 @@ def main() -> None:
     ap.add_argument("--econ", default=None, choices=list(ECON_BACKENDS),
                     help="replication-economy value-scoring backend "
                          "(default: the scenario's, or 'numpy')")
+    ap.add_argument("--strategy-mode", default=None, choices=list(STRATEGY_MODES),
+                    help="strategy planning engine (default: the scenario's, "
+                         "or 'sequential'; 'batch' plans each arrival burst "
+                         "in one strategy_plan kernel pass)")
     ap.add_argument("--econ-interval", type=float, default=None,
                     help="seconds between proactive-replication rounds "
                          "(default: auto — armed only for the economic/"
@@ -72,6 +76,8 @@ def main() -> None:
         spec = dataclasses.replace(spec, net=args.net)
     if args.econ is not None:
         spec = dataclasses.replace(spec, econ=args.econ)
+    if args.strategy_mode is not None:
+        spec = dataclasses.replace(spec, strategy_mode=args.strategy_mode)
     if args.econ_interval is not None:
         spec = dataclasses.replace(spec, econ_interval_s=args.econ_interval)
     print(f"{'strategy':>14} {'avg_job_time':>13} {'inter/job':>10} "

@@ -337,7 +337,7 @@ def test_cli_clean_run_exits_zero():
 # -- kernel registry (satellite: uniform packages) --------------------------
 
 KERNEL_NAMES = {"net_rerate", "event_engine", "st_cost", "value_score",
-                "selective_scan", "flash_attention"}
+                "selective_scan", "flash_attention", "strategy_plan"}
 
 
 def test_registry_discovers_all_kernels():

@@ -1,0 +1,222 @@
+"""Batched replica-strategy engine (``strategy_mode="batch"``): one
+``plan_batch`` pass per arrival burst through the ``strategy_plan`` kernel
+must produce the same FetchPlans the sequential strategies build one
+``plan_fetch`` at a time."""
+
+import copy
+import dataclasses
+import gc
+
+import numpy as np
+import pytest
+
+from repro.core import (AccessHistory, GridConfig, GridSimulator,
+                        GridTopology, NetworkEngine, ReplicaCatalog,
+                        ScenarioSpec, StorageState, StorageTensorView,
+                        STRATEGIES, build_catalog, build_topology,
+                        generate_jobs, get_scenario, make_strategy,
+                        run_experiment)
+from repro.launch.experiments import run_spec
+
+GB = 1e9
+ALL_STRATEGIES = sorted(STRATEGIES)
+
+
+def _random_world(rng):
+    """A small grid with random replicas, pins, offline sites and decayed
+    access history — every state axis the planners read."""
+    topo = GridTopology(int(rng.integers(2, 4)), int(rng.integers(2, 5)),
+                        lan_bandwidth=125e6, wan_bandwidth=1.25e6,
+                        storage_capacity=4 * GB, seed=int(rng.integers(100)))
+    cat = ReplicaCatalog()
+    stor = StorageState(cat, topo)
+    n_files = int(rng.integers(4, 11))
+    for i in range(n_files):
+        m = int(rng.integers(topo.n_sites))
+        cat.register_file(f"f{i}", float(rng.uniform(0.3, 1.2)) * GB, m)
+        stor.bootstrap(m, f"f{i}")
+    now = 1.0
+    for _ in range(2 * topo.n_sites):           # scatter extra replicas
+        lfn = f"f{int(rng.integers(n_files))}"
+        s = int(rng.integers(topo.n_sites))
+        if not stor.holds(s, lfn) and \
+                topo.sites[s].free_storage >= cat.size(lfn):
+            stor.add(s, lfn, now)
+            now += 1.0
+    for _ in range(3):                          # in-use (pinned) files
+        s = int(rng.integers(topo.n_sites))
+        contents = stor.site_contents(s)
+        if contents:
+            stor.pin(s, contents[int(rng.integers(len(contents)))])
+    for s in topo.sites[1:]:                    # churn (site 0 stays up)
+        if rng.random() < 0.15:
+            s.online = False
+    access = AccessHistory(cat, topo)
+    for _ in range(30):                         # decayed popularity + loads
+        now += float(rng.uniform(0.0, 400.0))
+        lfn = f"f{int(rng.integers(n_files))}"
+        site = int(rng.integers(topo.n_sites))
+        access.record_access(site, lfn, now)
+        src = int(rng.integers(topo.n_sites))
+        access.record_fetch(src, site, lfn, cat.size(lfn),
+                            bool(rng.integers(2)), now)
+    return topo, cat, stor, access
+
+
+def _as_tuple(plan):
+    return (plan.lfn, plan.src, plan.dst, plan.store, plan.evictions,
+            plan.inter_region, plan.remote_access)
+
+
+def _probe_plans_match(seed):
+    """On one random world: every strategy's ``plan_batch`` equals the
+    sequential twin's ``plan_fetch``, plan for plan — source pick, store
+    verdict, eviction list, inter-region flag."""
+    rng = np.random.default_rng(seed)
+    topo, cat, stor, access = _random_world(rng)
+    net = NetworkEngine(topo)
+    pairs = [(lfn, d) for lfn in sorted(cat.files)
+             for d in range(topo.n_sites)
+             if topo.sites[d].online and not stor.holds(d, lfn)]
+    for name in ALL_STRATEGIES:
+        seq = make_strategy(name, cat, topo, stor, access)
+        bat = make_strategy(name, cat, topo, stor, access,
+                            mode="batch", network=net)
+        got = bat.plan_batch(pairs)
+        for pair, plan in zip(pairs, got):
+            want = seq.plan_fetch(*pair)
+            assert _as_tuple(plan) == _as_tuple(want), (name, pair)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_batched_plans_match_sequential_seeded(seed):
+    """Fixed-seed slice of the property probe — runs everywhere, with or
+    without hypothesis."""
+    _probe_plans_match(seed)
+
+
+def test_batched_plans_match_sequential_property():
+    """Hypothesis-driven probe over arbitrary world seeds."""
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hypothesis.settings(max_examples=15, deadline=None)
+    @hypothesis.given(seed=st.integers(0, 2**32 - 1))
+    def probe(seed):
+        _probe_plans_match(seed)
+
+    probe()
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_batched_run_matches_sequential(strategy):
+    """End-to-end: singleton bursts take the sequential path bit-for-bit,
+    so a whole run must produce identical metrics under either mode."""
+    cfg = GridConfig(n_regions=2, sites_per_region=4)
+    seq = run_experiment(cfg, strategy=strategy, n_jobs=120)
+    bat = run_experiment(cfg, strategy=strategy, n_jobs=120,
+                         strategy_mode="batch")
+    assert bat.completed_jobs == seq.completed_jobs == 120
+    assert bat.avg_job_time == seq.avg_job_time
+    assert bat.avg_inter_comms == seq.avg_inter_comms
+    assert bat.total_wan_gb == seq.total_wan_gb
+    assert bat.makespan == seq.makespan
+
+
+def test_batched_burst_completes_and_is_deterministic():
+    """Multi-job bursts share one planning snapshot (the jax-broker
+    tolerance convention) — results stay deterministic and every job
+    completes through the revalidate-or-replan guard."""
+    cfg = GridConfig(n_regions=2, sites_per_region=4)
+    a = run_experiment(cfg, strategy="hrs", n_jobs=100, broker="jax",
+                       arrival_burst=10, strategy_mode="batch")
+    b = run_experiment(cfg, strategy="hrs", n_jobs=100, broker="jax",
+                       arrival_burst=10, strategy_mode="batch")
+    assert a.completed_jobs == a.n_jobs == 100
+    assert a.avg_job_time == b.avg_job_time
+    assert a.avg_inter_comms == b.avg_inter_comms
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_paper_baseline_batched_smoke(strategy):
+    """Every registered strategy runs the paper_baseline scenario in batch
+    mode through the config-driven launch path."""
+    spec = dataclasses.replace(get_scenario("paper_baseline"),
+                               strategy=strategy, strategy_mode="batch")
+    r = run_spec(spec, n_jobs=50)
+    assert r.completed_jobs == 50
+
+
+def test_view_tracks_storage_through_churn():
+    """The listener-maintained StorageTensorView equals a fresh rebuild
+    after a full batched run with evictions and churn-driven losses."""
+    cfg = GridConfig(n_regions=2, sites_per_region=4,
+                     storage_capacity=3e9)           # force evictions
+    topo = build_topology(cfg)
+    cat = build_catalog(cfg, topo)
+    sim = GridSimulator(topo, cat, strategy="hrs", strategy_mode="batch",
+                        broker="jax")
+    for info in cat.files.values():
+        sim.storage.bootstrap(info.master_site, info.lfn)
+    for j, job in enumerate(generate_jobs(cfg, 60)):
+        sim.submit_job(job, at=(j // 5) * 60.0)
+    sim.inject_failure(3, 500.0, 2000.0)
+    sim.run()
+    view = sim.strategy.view
+    view.sync()
+    fresh = StorageTensorView(cat, topo, sim.storage)
+    for attr in ("cat_present", "region_counts", "st_present", "st_atime",
+                 "st_seq", "st_pins", "sizes", "masters"):
+        assert np.array_equal(getattr(view, attr), getattr(fresh, attr)), attr
+
+
+def test_storage_listeners_are_weak():
+    """A view that goes out of scope is collected, not notified forever:
+    StorageState holds listeners by weak reference only (and a deepcopy —
+    the sanitizer's twin path — drops them entirely)."""
+    rng = np.random.default_rng(7)
+    topo, cat, stor, _ = _random_world(rng)
+    view = StorageTensorView(cat, topo, stor)
+    ref = stor._listeners[-1]
+    del view
+    gc.collect()
+    assert ref() is None
+    lfn = stor.site_contents(0)[0] if stor.site_contents(0) else None
+    if lfn is not None:
+        stor.touch(0, lfn, 9999.0)      # dead listener must not blow up
+    keeper = StorageTensorView(cat, topo, stor)
+    assert stor._listeners[-1]() is keeper
+    assert copy.deepcopy(stor)._listeners == []
+
+
+def test_batch_mode_rejects_strategy_instance():
+    cfg = GridConfig(n_regions=2, sites_per_region=2)
+    topo = build_topology(cfg)
+    cat = build_catalog(cfg, topo)
+    stor = StorageState(cat, topo)
+    inst = make_strategy("hrs", cat, topo, stor)
+    with pytest.raises(ValueError, match="registry name"):
+        GridSimulator(topo, cat, strategy=inst, strategy_mode="batch")
+
+
+def test_sanitize_incompatible_with_batch_mode():
+    cfg = GridConfig(n_regions=2, sites_per_region=2)
+    topo = build_topology(cfg)
+    cat = build_catalog(cfg, topo)
+    with pytest.raises(ValueError, match="sanitize"):
+        GridSimulator(topo, cat, strategy="hrs", strategy_mode="batch",
+                      sanitize=True)
+
+
+def test_batch_strategy_requires_network():
+    cfg = GridConfig(n_regions=2, sites_per_region=2)
+    topo = build_topology(cfg)
+    cat = build_catalog(cfg, topo)
+    stor = StorageState(cat, topo)
+    with pytest.raises(ValueError, match="network"):
+        make_strategy("hrs", cat, topo, stor, mode="batch")
+    with pytest.raises(ValueError, match="strategy_mode"):
+        make_strategy("hrs", cat, topo, stor, mode="bogus")
+    with pytest.raises(ValueError, match="strategy_mode"):
+        dataclasses.replace(get_scenario("paper_baseline"),
+                            strategy_mode="bogus")

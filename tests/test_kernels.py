@@ -13,6 +13,7 @@ from repro.kernels.net_rerate import net_rerate, net_rerate_ref
 from repro.kernels.selective_scan.kernel import selective_scan_kernel
 from repro.kernels.selective_scan.ref import selective_scan_ref
 from repro.kernels.st_cost import st_cost, st_cost_dense_ref, st_cost_ref
+from repro.kernels.strategy_plan import strategy_plan
 from repro.kernels.value_score import value_score, value_score_ref
 
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
@@ -422,3 +423,81 @@ def test_selective_scan_streaming_equivalence():
                                np.asarray(y_full), atol=1e-5)
     np.testing.assert_allclose(np.asarray(h_end), np.asarray(h_full),
                                atol=1e-5)
+
+
+# -- strategy_plan: batched replica-strategy planning ----------------------
+
+def _strategy_plan_case(seed, sites, pairs):
+    """Random burst: forced holder per pair (masters are durable), block
+    regions, half the sites carrying decayed serve load."""
+    rng = np.random.default_rng(seed)
+    bw = rng.random((sites, pairs)) * 1.25e8 + 1e5
+    fetch = rng.random((sites, pairs)) < 0.15
+    fetch[rng.integers(0, sites, pairs), np.arange(pairs)] = True
+    n_regions = max(2, sites // 8)
+    region = np.arange(sites) * n_regions // sites
+    local = region[:, None] == rng.integers(0, n_regions, pairs)[None, :]
+    serve = np.where(rng.random(sites) < 0.5, rng.random(sites) * 9.0, 0.0)
+    size = rng.random(pairs) * 1e9 + 1e6
+    free = np.where(rng.random(pairs) < 0.5,
+                    rng.random(pairs) * 2e9, rng.random(pairs) * 1e8)
+    return bw, fetch, local, serve, free, size
+
+
+@pytest.mark.parametrize("seed,sites,pairs", [
+    (0, 4, 3),              # tiny (heavy sublane/lane padding)
+    (1, 13, 17),            # one paper region
+    (2, 52, 50),            # the full paper grid x a bulk burst
+    (3, 129, 50),           # ragged site axis, grid_500-burst pair count
+    (4, 37, 260),           # ragged on both axes
+])
+def test_strategy_plan_interpret_matches_oracle(seed, sites, pairs):
+    """The plan kernel under x64 interpret mode is *bit-identical* to the
+    float64 oracle: where/divide/compare are exact IEEE ops and the
+    strict-> running maximum is np.argmax's first occurrence."""
+    case = _strategy_plan_case(seed, sites, pairs)
+    ref = strategy_plan(*case, backend="numpy")
+    out = strategy_plan(*case, backend="interpret")
+    for got, want in zip(out, ref):
+        assert np.array_equal(got, want)
+
+
+def test_strategy_plan_auto_backend_on_cpu_is_exact():
+    """backend='auto' off-TPU routes to the float64 oracle — the per-burst
+    fast path ``strategy_mode="batch"`` uses."""
+    case = _strategy_plan_case(7, 24, 9)
+    ref = strategy_plan(*case, backend="numpy")
+    out = strategy_plan(*case, backend="auto")
+    for got, want in zip(out, ref):
+        assert np.array_equal(got, want)
+
+
+def test_strategy_plan_decisions_and_edges():
+    """Hand-checkable burst: lowest-id tie-break, serve-load discount
+    flipping a pick, region-local restriction, inter-region flag off the
+    chosen row, store verdict, empty-burst shapes."""
+    bw = np.array([[4.0, 8.0], [4.0, 2.0], [3.0, 9.0]])
+    fetch = np.array([[True, True], [True, True], [False, True]])
+    local = np.array([[False, False], [True, True], [True, False]])
+    serve = np.zeros(3)
+    free = np.array([5.0, 1.0])
+    size = np.array([4.0, 2.0])
+    src_g, src_l, has_l, inter_g, store_ok = strategy_plan(
+        bw, fetch, local, serve, free, size, backend="numpy")
+    assert list(src_g) == [0, 2]        # pair 0: 4.0 tie -> lowest id
+    assert list(src_l) == [1, 1]        # region-restricted best
+    assert list(has_l) == [True, True]
+    assert list(inter_g) == [True, True]
+    assert list(store_ok) == [True, False]
+    # a serve load on site 2 flips pair 1's global pick to site 0
+    src_g2, _, _, inter_g2, _ = strategy_plan(
+        bw, fetch, local, np.array([0.0, 0.0, 1.0]), free, size,
+        backend="numpy")
+    assert list(src_g2) == [0, 0]
+    assert list(inter_g2) == [True, True]
+    # empty burst: all five outputs are 0-wide
+    empty = strategy_plan(bw[:, :0], fetch[:, :0], local[:, :0], serve,
+                          free[:0], size[:0], backend="numpy")
+    assert all(o.shape == (0,) for o in empty)
+    with pytest.raises(ValueError, match="backend"):
+        strategy_plan(bw, fetch, local, serve, free, size, backend="bogus")
