@@ -37,11 +37,20 @@ import csv
 import dataclasses
 import json
 import os
-import time
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 
 STRATS = ("hrs", "bhr", "lru")
+
+
+def _probe():
+    """Shared bench timer: a report-mode :class:`repro.obs.Probe`. Benches
+    time work with ``with p.span(name): ...`` + ``p.elapsed_us(name)``
+    instead of hand-rolled ``perf_counter`` deltas — same clock, one
+    implementation, and nested spans compose (a bench can reuse the
+    simulator's own phase names when it wants a breakdown)."""
+    from repro.obs import Probe
+    return Probe("report")
 
 
 def _cfg(**kw):
@@ -69,9 +78,10 @@ def _write_csv(name: str, header: list[str], rows: list[list]) -> None:
 def fig4_avg_job_time_vs_njobs() -> None:
     from repro.launch.experiments import sweep
     ns = (100, 200, 300, 400, 500)
-    t0 = time.perf_counter()
-    res = sweep(_baseline(), axis="n_jobs", values=ns, strategies=STRATS)
-    us = (time.perf_counter() - t0) * 1e6 / len(ns)
+    p = _probe()
+    with p.span("fig4"):
+        res = sweep(_baseline(), axis="n_jobs", values=ns, strategies=STRATS)
+    us = p.elapsed_us("fig4") / len(ns)
     rows = [[n] + [round(res[(n, s)].avg_job_time, 1) for s in STRATS]
             for n in ns]
     _write_csv("bench_fig4.csv", ["n_jobs", *STRATS], rows)
@@ -82,9 +92,11 @@ def fig4_avg_job_time_vs_njobs() -> None:
 
 def fig5_avg_job_time_1000() -> None:
     from repro.launch.experiments import sweep
-    t0 = time.perf_counter()
-    res = sweep(_baseline(), axis="n_jobs", values=(1000,), strategies=STRATS)
-    us = (time.perf_counter() - t0) * 1e6
+    p = _probe()
+    with p.span("fig5"):
+        res = sweep(_baseline(), axis="n_jobs", values=(1000,),
+                    strategies=STRATS)
+    us = p.elapsed_us("fig5")
     vals = {s: res[(1000, s)].avg_job_time for s in STRATS}
     _write_csv("bench_fig5.csv", ["strategy", "avg_job_time_s"],
                [[s, round(vals[s], 1)] for s in STRATS])
@@ -95,9 +107,11 @@ def fig5_avg_job_time_1000() -> None:
 
 def fig6_inter_communications() -> None:
     from repro.launch.experiments import sweep
-    t0 = time.perf_counter()
-    res = sweep(_baseline(), axis="n_jobs", values=(500,), strategies=STRATS)
-    us = (time.perf_counter() - t0) * 1e6
+    p = _probe()
+    with p.span("fig6"):
+        res = sweep(_baseline(), axis="n_jobs", values=(500,),
+                    strategies=STRATS)
+    us = p.elapsed_us("fig6")
     vals = {s: res[(500, s)].avg_inter_comms for s in STRATS}
     _write_csv("bench_fig6.csv", ["strategy", "avg_inter_comms"],
                [[s, round(vals[s], 3)] for s in STRATS])
@@ -108,9 +122,11 @@ def fig6_inter_communications() -> None:
 def fig7_wan_bandwidth_sweep() -> None:
     from repro.launch.experiments import sweep
     mbpss = (10, 50, 100, 500, 1000)
-    t0 = time.perf_counter()
-    res = sweep(_baseline(), axis="wan_mbps", values=mbpss, strategies=STRATS)
-    us = (time.perf_counter() - t0) * 1e6 / len(mbpss)
+    p = _probe()
+    with p.span("fig7"):
+        res = sweep(_baseline(), axis="wan_mbps", values=mbpss,
+                    strategies=STRATS)
+    us = p.elapsed_us("fig7") / len(mbpss)
     rows = [[m] + [round(res[(m, s)].avg_job_time, 1) for s in STRATS]
             for m in mbpss]
     _write_csv("bench_fig7.csv", ["wan_mbps", *STRATS], rows)
@@ -125,9 +141,10 @@ def scheduler_ablation() -> None:
     from repro.launch.experiments import sweep
     scheds = ("dataaware", "random", "leastloaded", "shortesttransfer")
     base = dataclasses.replace(_baseline(), n_jobs=300)
-    t0 = time.perf_counter()
-    res = sweep(base, axis="scheduler", values=scheds, strategies=("hrs",))
-    us = (time.perf_counter() - t0) * 1e6
+    p = _probe()
+    with p.span("sched_ablation"):
+        res = sweep(base, axis="scheduler", values=scheds, strategies=("hrs",))
+    us = p.elapsed_us("sched_ablation")
     vals = {s: res[(s, "hrs")].avg_job_time for s in scheds}
     _write_csv("bench_sched_ablation.csv", ["scheduler", "avg_job_time_s"],
                [[s, round(vals[s], 1)] for s in scheds])
@@ -139,11 +156,12 @@ def eviction_phase_ablation() -> None:
     """Isolate the paper's novel two-phase eviction: HRS vs HRS with plain
     LRU eviction (everything else identical)."""
     from repro.launch.experiments import sweep
-    t0 = time.perf_counter()
-    res = sweep(_baseline(), axis="n_jobs", values=(500,),
-                strategies=("hrs", "hrs_singlephase"))
+    p = _probe()
+    with p.span("eviction_ablation"):
+        res = sweep(_baseline(), axis="n_jobs", values=(500,),
+                    strategies=("hrs", "hrs_singlephase"))
     full, single = res[(500, "hrs")], res[(500, "hrs_singlephase")]
-    us = (time.perf_counter() - t0) * 1e6
+    us = p.elapsed_us("eviction_ablation")
     gain = 100 * (single.avg_job_time - full.avg_job_time) / single.avg_job_time
     _write_csv("bench_eviction_ablation.csv",
                ["strategy", "avg_job_time_s", "avg_inter_comms"],
@@ -167,26 +185,28 @@ def sched_throughput() -> None:
     js = JaxScheduler(cat, topo)
     jobs = generate_jobs(cfg, 64)
     js.select(jobs[0].required)          # warm up
-    t0 = time.perf_counter()
+    p = _probe()
     reps = 20
-    for _ in range(reps):
-        js.select_batch([j.required for j in jobs])
-    us = (time.perf_counter() - t0) * 1e6 / (reps * len(jobs))
+    with p.span("dispatch"):
+        for _ in range(reps):
+            js.select_batch([j.required for j in jobs])
+    us = p.elapsed_us("dispatch") / (reps * len(jobs))
     _row("jit_dispatch", us, f"us_per_decision={us:.1f}")
 
 
 def failover_recovery() -> None:
     """Fault-tolerance: DES with failures + speculative backups."""
     from repro.core import run_experiment
-    t0 = time.perf_counter()
-    base = run_experiment(_cfg(), strategy="hrs", n_jobs=200)
-    failures = [(5, 2000.0, 4000.0), (20, 6000.0, 5000.0)]
-    failed = run_experiment(_cfg(), strategy="hrs", n_jobs=200,
-                            failures=failures)
-    slow = run_experiment(_cfg(), strategy="hrs", n_jobs=200,
-                          slowdowns=[(7, 1000.0, 8000.0, 0.05)],
-                          speculative_backups=True)
-    us = (time.perf_counter() - t0) * 1e6
+    p = _probe()
+    with p.span("failover"):
+        base = run_experiment(_cfg(), strategy="hrs", n_jobs=200)
+        failures = [(5, 2000.0, 4000.0), (20, 6000.0, 5000.0)]
+        failed = run_experiment(_cfg(), strategy="hrs", n_jobs=200,
+                                failures=failures)
+        slow = run_experiment(_cfg(), strategy="hrs", n_jobs=200,
+                              slowdowns=[(7, 1000.0, 8000.0, 0.05)],
+                              speculative_backups=True)
+    us = p.elapsed_us("failover")
     # n_jobs is the *submitted* count and is 200 by construction; only
     # completed_jobs (len(records)) can tell whether recovery really drained
     # the queue.
@@ -217,11 +237,18 @@ def scale_sweep(scale_jobs: int = 100_000) -> None:
     Python scans (holders walk + per-resident eviction checks) are the
     wall there, and the batched path amortizes them. ``scale_jobs`` caps
     *every* cell's job count (the CI smoke runs the whole sweep at
-    2000). Writes machine-readable ``results/BENCH_scale.json``."""
+    2000). Writes machine-readable ``results/BENCH_scale.json``.
+
+    Every cell runs with ``obs="report"`` (same overhead for every row,
+    so the ratio columns stay fair) and carries the measured four-phase
+    wall breakdown (``"phases"``: dispatch / strategy_plan / flush /
+    other seconds partitioning ``wall_s``) plus the probe counters'
+    plan-cache split — the engine-bound-vs-planner-bound evidence,
+    measured rather than inferred."""
     from repro.core import SCENARIOS
     from repro.launch.experiments import run_scenario
     rows = []
-    t0 = time.perf_counter()
+    p = _probe()
     raw = [("bulk_diana", min(n, scale_jobs), seeds)
            for n, seeds in ((2000, (0, 1, 2)), (5000, (0, 1)),
                             (10000, (0, 1)))]
@@ -257,18 +284,28 @@ def scale_sweep(scale_jobs: int = 100_000) -> None:
                     (evict, min(evict.n_jobs, scale_jobs))):
         specs.append((dataclasses.replace(base, strategy_mode="batch"),
                       n, (0,)))
-    for spec, n, seeds in specs:
-        for row in run_scenario(spec, n_jobs=n, seeds=seeds):
-            rows.append({
-                "scenario": spec.name, "n_sites": spec.n_sites,
-                "net": spec.net, "strategy_mode": spec.strategy_mode,
-                "n_jobs": row["n_jobs"], "seed": row["seed"],
-                "wall_s": row["wall_s"],
-                "avg_job_time_s": row["avg_job_time_s"],
-                "avg_inter_comms": row["avg_inter_comms"],
-                "completed_jobs": row["completed_jobs"],
-                "makespan_s": row["makespan_s"],
-            })
+    with p.span("scale_sweep"):
+        for spec, n, seeds in specs:
+            cell = dataclasses.replace(spec, obs="report")
+            for row in run_scenario(cell, n_jobs=n, seeds=seeds):
+                out = {
+                    "scenario": spec.name, "n_sites": spec.n_sites,
+                    "net": spec.net, "strategy_mode": spec.strategy_mode,
+                    "n_jobs": row["n_jobs"], "seed": row["seed"],
+                    "wall_s": row["wall_s"],
+                    "avg_job_time_s": row["avg_job_time_s"],
+                    "avg_inter_comms": row["avg_inter_comms"],
+                    "completed_jobs": row["completed_jobs"],
+                    "makespan_s": row["makespan_s"],
+                    "phases": row["phases"],
+                }
+                counters = row.get("counters", {})
+                plan_cache = {k.split(".", 1)[1]: v
+                              for k, v in counters.items()
+                              if k.startswith("plan_cache.")}
+                if plan_cache:
+                    out["plan_cache"] = plan_cache
+                rows.append(out)
     # derived column: wall-clock ratio vs the matching sequential cell
     seq_wall = {(r["scenario"], r["net"], r["n_jobs"], r["seed"]): r["wall_s"]
                 for r in rows if r["strategy_mode"] == "sequential"}
@@ -282,7 +319,7 @@ def scale_sweep(scale_jobs: int = 100_000) -> None:
         json.dump({"strategy": "hrs", "scheduler": "dataaware",
                    "broker": "jax", "arrival_burst": 50, "rows": rows}, f,
                   indent=1)
-    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    us = p.elapsed_us("scale_sweep") / len(rows)
     biggest = max(rows, key=lambda r: (r["n_sites"], r["n_jobs"]))
     sat_wall = {r["net"]: r["wall_s"] for r in rows
                 if r["scenario"] == "grid_500_saturated"
@@ -294,6 +331,16 @@ def scale_sweep(scale_jobs: int = 100_000) -> None:
                  if r["scenario"] == "grid_500"), float("nan"))
     bevict = next((r["batched_strategy_speedup"] for r in batched
                    if r["scenario"] == "grid_500_evict"), float("nan"))
+    g500 = next((r for r in rows if r["scenario"] == "grid_500"
+                 and r["strategy_mode"] == "sequential"), None)
+    if g500 is not None:
+        ph, wall = g500["phases"], max(g500["wall_s"], 1e-9)
+        g500_phases = (f"grid_500_phases=dispatch:{ph['dispatch_s']/wall:.0%}"
+                       f"/plan:{ph['strategy_plan_s']/wall:.0%}"
+                       f"/flush:{ph['flush_s']/wall:.0%}"
+                       f"/other:{ph['other_s']/wall:.0%}")
+    else:
+        g500_phases = "grid_500_phases=n/a"
     _row("scale_sweep", us,
          f"rows={len(rows)};biggest={biggest['scenario']};"
          f"biggest_wall={biggest['wall_s']:.1f}s;"
@@ -301,7 +348,8 @@ def scale_sweep(scale_jobs: int = 100_000) -> None:
          f"biggest_completed={biggest['completed_jobs']};"
          f"saturated_device_speedup={speedup:.2f}x;"
          f"batched_strategy_speedup_500={b500:.2f}x;"
-         f"batched_strategy_speedup_evict={bevict:.2f}x")
+         f"batched_strategy_speedup_evict={bevict:.2f}x;"
+         f"{g500_phases}")
 
 
 def strategy_sweep(n_jobs: int = 10000) -> None:
@@ -315,13 +363,14 @@ def strategy_sweep(n_jobs: int = 10000) -> None:
     strategies = ("hrs", "bhr", "lru", "economic", "predictive")
     seeds = (0, 1)
     rows = []
-    t0 = time.perf_counter()
-    for scen in ("cache_starved", "hotset_drift"):
-        base = SCENARIOS[scen]
-        for strat in strategies:
-            spec = dataclasses.replace(base, strategy=strat)
-            for row in run_scenario(spec, n_jobs=n_jobs, seeds=seeds):
-                rows.append({"scenario": scen, "strategy": strat, **row})
+    p = _probe()
+    with p.span("strategy_sweep"):
+        for scen in ("cache_starved", "hotset_drift"):
+            base = SCENARIOS[scen]
+            for strat in strategies:
+                spec = dataclasses.replace(base, strategy=strat)
+                for row in run_scenario(spec, n_jobs=n_jobs, seeds=seeds):
+                    rows.append({"scenario": scen, "strategy": strat, **row})
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, "BENCH_strategies.json"), "w") as f:
         json.dump({"n_jobs": n_jobs, "seeds": list(seeds),
@@ -332,7 +381,7 @@ def strategy_sweep(n_jobs: int = 10000) -> None:
                if r["scenario"] == scen and r["strategy"] == strat]
         return sum(sel) / len(sel)
 
-    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    us = p.elapsed_us("strategy_sweep") / len(rows)
     hrs_d, pred_d = mean_ajt("hotset_drift", "hrs"), mean_ajt("hotset_drift",
                                                               "predictive")
     hrs_s, econ_s = mean_ajt("cache_starved", "hrs"), mean_ajt("cache_starved",
@@ -351,17 +400,18 @@ def net_sweep(n_jobs: int = 10000) -> None:
     at the 10k-job scale point. Writes ``results/BENCH_net.json``."""
     from repro.core import SCENARIOS
     from repro.launch.experiments import run_spec
-    t0 = time.perf_counter()
+    p = _probe()
     fidelity = []
     for scen in ("deep_5tier", "deep_contended"):
         base = SCENARIOS[scen]
         for net in ("topmost", "numpy"):
             spec = dataclasses.replace(base, net=net)
-            t1 = time.perf_counter()
-            r = run_spec(spec, n_jobs=n_jobs)
+            cell = f"fidelity:{scen}:{net}"
+            with p.span(cell):
+                r = run_spec(spec, n_jobs=n_jobs)
             fidelity.append({
                 "scenario": scen, "net": net, "n_jobs": n_jobs,
-                "wall_s": round(time.perf_counter() - t1, 3),
+                "wall_s": round(p.elapsed_us(cell) / 1e6, 3),
                 "avg_job_time_s": r.avg_job_time,
                 "avg_inter_comms": r.avg_inter_comms,
                 "total_wan_gb": r.total_wan_gb,
@@ -372,11 +422,12 @@ def net_sweep(n_jobs: int = 10000) -> None:
     bulk = SCENARIOS["bulk_diana"]
     for net in ("numpy", "pallas"):
         spec = dataclasses.replace(bulk, net=net)
-        t1 = time.perf_counter()
-        r = run_spec(spec, n_jobs=n_jobs)
+        cell = f"perf:{net}"
+        with p.span(cell):
+            r = run_spec(spec, n_jobs=n_jobs)
         perf.append({
             "scenario": "bulk_diana", "net": net, "n_jobs": n_jobs,
-            "wall_s": round(time.perf_counter() - t1, 3),
+            "wall_s": round(p.elapsed_us(cell) / 1e6, 3),
             "avg_job_time_s": r.avg_job_time,
             "completed_jobs": r.completed_jobs,
         })
@@ -384,7 +435,7 @@ def net_sweep(n_jobs: int = 10000) -> None:
     with open(os.path.join(RESULTS_DIR, "BENCH_net.json"), "w") as f:
         json.dump({"n_jobs": n_jobs, "fidelity": fidelity, "perf": perf},
                   f, indent=1)
-    us = (time.perf_counter() - t0) * 1e6 / (len(fidelity) + len(perf))
+    us = sum(p.phase_total_s.values()) * 1e6 / (len(fidelity) + len(perf))
     by = {(r["scenario"], r["net"]): r for r in fidelity}
     d5 = (by[("deep_5tier", "numpy")]["avg_job_time_s"]
           / by[("deep_5tier", "topmost")]["avg_job_time_s"] - 1.0)
@@ -407,10 +458,11 @@ def kernel_flash_attention() -> None:
     v = jnp.ones((2, 4, 512, 64), jnp.bfloat16)
     f = jax.jit(lambda a, b, c: flash_attention_ref(a, b, c, causal=True))
     f(q, k, v).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(5):
-        f(q, k, v).block_until_ready()
-    us = (time.perf_counter() - t0) * 1e6 / 5
+    p = _probe()
+    with p.span("flash_ref"):
+        for _ in range(5):
+            f(q, k, v).block_until_ready()
+    us = p.elapsed_us("flash_ref") / 5
     flops = 2 * 2 * 8 * 512 * 512 * 64 * 2
     _row("kernel_flash_ref_cpu", us, f"gflops_s={flops/us*1e6/1e9:.1f}")
 
@@ -429,10 +481,11 @@ def kernel_selective_scan() -> None:
     h0 = jnp.zeros((Bz, Di, N), jnp.float32)
     f = jax.jit(lambda *a: selective_scan_ref(*a)[0])
     f(x, dt, B, C, A, D, h0).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(5):
-        f(x, dt, B, C, A, D, h0).block_until_ready()
-    us = (time.perf_counter() - t0) * 1e6 / 5
+    p = _probe()
+    with p.span("scan_ref"):
+        for _ in range(5):
+            f(x, dt, B, C, A, D, h0).block_until_ready()
+    us = p.elapsed_us("scan_ref") / 5
     _row("kernel_scan_ref_cpu", us,
          f"tokens_per_s={Bz*S/us*1e6:.0f}")
 

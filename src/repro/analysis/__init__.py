@@ -10,9 +10,10 @@ catalog and suppression syntax):
   ``(time, seq)`` tie key.
 * **coherence** (:mod:`repro.analysis.coherence`) — snapshot-coherence
   rules: every replica-table mutation flows through the
-  listener-notifying :class:`~repro.core.catalog.ReplicaCatalog` API, and
+  listener-notifying :class:`~repro.core.catalog.ReplicaCatalog` API,
   every public read of engine-shared snapshot state calls ``sync()``
-  first.
+  first, and telemetry probe callbacks (``repro/obs/``) never mutate
+  the engine objects they observe.
 * **jaxpr audit** (:mod:`repro.analysis.jaxpr_audit`) — traces every
   registered kernel (:func:`repro.kernels.registered_kernels`) and checks
   rank ceilings, dtype discipline, host-callback freedom and per-equation
@@ -47,7 +48,8 @@ RULES: dict[str, str] = {
     "SL004": "id()/hash() used in a sort key — ties break on memory "
              "layout, not data",
     "SL005": "wall-clock read (time.time/perf_counter/...) in sim-state "
-             "code (repro/core/, repro/grid/)",
+             "code (repro/core/, repro/grid/, repro/obs/ — the telemetry "
+             "probe itself is the sanctioned exemption)",
     "SL010": "heapq.heappush of an event tuple whose second element is "
              "not the monotonic seq tie-breaker",
     "SL011": "ReplicaCatalog._holders touched outside catalog.py, or "
@@ -56,6 +58,8 @@ RULES: dict[str, str] = {
              "without calling sync() first",
     "SL013": "StorageState private maps touched outside replica.py, or "
              "mutated inside it without _notify",
+    "SL014": "obs telemetry code mutates an object received as a "
+             "parameter (probe callbacks are observation-only)",
 }
 
 #: Files skipped entirely (the linter's own test fixtures would flag).

@@ -38,6 +38,20 @@ motivates checking them statically:
   ``replica.py``, every public method that mutates one of those maps
   must call ``_notify`` in the same body (``_``-private helpers are
   exempt — their public callers carry the obligation, same as SL012).
+
+* **SL014 — obs probe callbacks are observation-only.** The telemetry
+  package (PR 9) is handed live engine objects — ``GridSampler.sample``
+  receives the running ``GridSimulator`` — and is simultaneously the
+  one sim-adjacent package exempt from the SL005 wall-clock ban. The
+  bit-identity contract ("any obs mode leaves the goldens untouched")
+  therefore rests on obs code never *writing* through those handles.
+  Inside ``repro/obs/``, any function body that (a) calls a mutating
+  method (``submit_job``, ``add_replica``, ``rerate``, ``append``,
+  ``pop``, ...) on a receiver rooted at one of its own parameters, or
+  (b) assigns/augments/deletes through an attribute or subscript chain
+  rooted at a parameter, is flagged. ``self``/``cls`` are excluded —
+  mutating the probe's *own* bookkeeping is the package's job; the rule
+  polices the boundary to foreign objects passed in.
 """
 
 from __future__ import annotations
@@ -51,6 +65,32 @@ PRIVATE_REPLICA_MAP = "_holders"
 STORAGE_OWNER_PATH = "repro/core/replica.py"
 PRIVATE_STORAGE_MAPS = frozenset(("_contents", "_pins", "_add_seq", "_lru"))
 LISTENER_PREFIX = "on_"
+#: SL014 scope: files whose path contains this substring.
+OBS_PATH = "repro/obs/"
+#: Method names that mutate their receiver. Covers the engine's own
+#: mutators (simulator / catalog / storage / network / access-history
+#: APIs) plus the builtin container mutators — calling any of these on
+#: an object that arrived as a parameter is a state write, which obs
+#: code must never perform.
+OBS_MUTATOR_CALLS = frozenset((
+    # catalog / storage / replica-strategy
+    "register_file", "add_replica", "remove_replica", "bootstrap",
+    "add", "remove", "touch", "pin", "unpin", "lose", "plan_fetch",
+    "plan_batch", "refresh_plan",
+    # simulator / scheduler / broker
+    "submit_job", "inject_failure", "run", "dispatch", "select",
+    "select_batch",
+    # network engine
+    "alloc", "release", "rerate", "flush", "advance", "step",
+    # access history / economy
+    "record_access", "record_fetch", "record_prefetch",
+    "invalidate_online", "decay",
+    # builtin / heapq container mutators
+    "heappush", "heappop", "heapreplace", "heapify",
+    "append", "appendleft", "extend", "insert", "pop", "popleft",
+    "popitem", "update", "setdefault", "clear", "discard", "sort",
+    "reverse", "fill", "put", "resize",
+))
 
 
 def _flag(findings: list[Finding], rule: str, path: str, lines: list[str],
@@ -354,10 +394,83 @@ def check_sync_coherence(tree: ast.Module, path: str,
     return findings
 
 
+# ---------------------------------------------------------------------------
+# SL014
+# ---------------------------------------------------------------------------
+
+
+def _root_name(expr: ast.expr) -> str | None:
+    """The base ``Name`` of an attribute/subscript chain, or ``None``.
+
+    ``sim.catalog._holders[lfn]`` -> ``"sim"``; chains rooted at calls
+    or literals return ``None`` (a call result is a fresh object the
+    caller owns).
+    """
+    while isinstance(expr, (ast.Attribute, ast.Subscript)):
+        expr = expr.value
+    return expr.id if isinstance(expr, ast.Name) else None
+
+
+def _fn_params(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> set[str]:
+    args = fn.args
+    names = {a.arg for a in (args.posonlyargs + args.args + args.kwonlyargs)}
+    if args.vararg is not None:
+        names.add(args.vararg.arg)
+    if args.kwarg is not None:
+        names.add(args.kwarg.arg)
+    return names - {"self", "cls"}
+
+
+def check_obs_observation_only(tree: ast.Module, path: str,
+                               source: str) -> list[Finding]:
+    """SL014: obs code may not mutate objects handed in as parameters
+    (see module doc). Scope: files under ``repro/obs/``."""
+    findings: list[Finding] = []
+    if OBS_PATH not in path:
+        return findings
+    lines = source.splitlines()
+
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        params = _fn_params(fn)
+        if not params:
+            continue
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Call) \
+                    and isinstance(sub.func, ast.Attribute) \
+                    and sub.func.attr in OBS_MUTATOR_CALLS:
+                root = _root_name(sub.func.value)
+                if root in params:
+                    _flag(findings, "SL014", path, lines, sub,
+                          f"{fn.name}() calls mutating "
+                          f"{root}...{sub.func.attr}() on a parameter — "
+                          "obs probes are observation-only; copy the data "
+                          "out instead of writing through the handle")
+            elif isinstance(sub, (ast.Assign, ast.Delete)):
+                for t in sub.targets:
+                    if isinstance(t, (ast.Attribute, ast.Subscript)) \
+                            and _root_name(t) in params:
+                        _flag(findings, "SL014", path, lines, sub,
+                              f"{fn.name}() writes through parameter "
+                              f"{_root_name(t)!r} — obs probes are "
+                              "observation-only")
+            elif isinstance(sub, (ast.AugAssign, ast.AnnAssign)):
+                t = sub.target
+                if isinstance(t, (ast.Attribute, ast.Subscript)) \
+                        and _root_name(t) in params:
+                    _flag(findings, "SL014", path, lines, sub,
+                          f"{fn.name}() writes through parameter "
+                          f"{_root_name(t)!r} — obs probes are "
+                          "observation-only")
+    return findings
+
+
 def lint_coherence(source: str, path: str) -> list[Finding]:
-    """Run all three coherence rules over one file."""
+    """Run all four coherence rules over one file."""
     tree = ast.parse(source, filename=path)
     findings = check_catalog_bypass(tree, path, source)
     findings += check_storage_bypass(tree, path, source)
     findings += check_sync_coherence(tree, path, source)
+    findings += check_obs_observation_only(tree, path, source)
     return sorted(findings, key=lambda f: (f.line, f.rule))

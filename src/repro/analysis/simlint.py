@@ -24,9 +24,12 @@ Rules (see docs/ANALYSIS.md for the full catalog with examples):
 * **SL004** — ``id()``/``hash()`` used as a sort/min/max tie-break key.
 * **SL005** — wall-clock reads (``time.time``, ``datetime.now``,
   ``uuid.uuid4``, ``os.urandom``) inside the simulation-state packages
-  (``repro/core``, ``repro/grid``). Measurement code (bench harnesses,
-  the fault-injection *training* supervisor) lives outside that scope
-  and may read real clocks.
+  (``repro/core``, ``repro/grid``, ``repro/obs``). Measurement code
+  (bench harnesses, the fault-injection *training* supervisor) lives
+  outside that scope and may read real clocks. ``repro/obs/`` is the
+  one sanctioned in-scope exemption: the telemetry probe exists to
+  measure host phase time, and the companion rule SL014 (coherence)
+  guarantees its callbacks cannot write engine state back.
 * **SL010** — every ``heapq.heappush`` onto an event queue must push a
   ``(time, seq, ...)`` tuple: a literal tuple of length >= 2 whose
   second element mentions the sequence counter. This is the static half
@@ -76,7 +79,12 @@ CLOCK_CALLS = frozenset(
      "datetime.today", "date.today", "uuid.uuid1", "uuid.uuid4",
      "os.urandom"})
 #: Paths (posix substrings) where SL005 wall-clock reads are banned.
-SIM_STATE_PATHS = ("repro/core/", "repro/grid/")
+SIM_STATE_PATHS = ("repro/core/", "repro/grid/", "repro/obs/")
+#: SL005 carve-out: the telemetry probe is *the* sanctioned wall-clock
+#: reader — phase timers are host-time by definition. Its inability to
+#: feed that nondeterminism back into simulation state is checked by
+#: SL014 instead (repro.analysis.coherence).
+SL005_EXEMPT_PATHS = ("repro/obs/",)
 
 
 def _ann_kind(ann: ast.expr | None) -> Optional[str]:
@@ -113,7 +121,9 @@ class _Linter(ast.NodeVisitor):
         # name/attr -> 'set' | 'container_of_set' (scope-stacked)
         self.env_stack: list[dict[str, str]] = [{}]
         self.attr_env_stack: list[dict[str, str]] = [{}]
-        self.in_sim_path = any(s in path for s in SIM_STATE_PATHS)
+        self.in_sim_path = (any(s in path for s in SIM_STATE_PATHS)
+                            and not any(s in path
+                                        for s in SL005_EXEMPT_PATHS))
 
     # -- plumbing ---------------------------------------------------------
 

@@ -2,6 +2,7 @@
 HRS replication, plus the discrete-event engine that evaluates them and the
 jit-compiled dispatch path used by the training/serving runtime."""
 
+from ..obs import OBS_MODES, TelemetryReport
 from .access import AccessHistory
 from .catalog import FileInfo, ReplicaCatalog
 from .economy import (ECON_BACKENDS, EconomicValue, FileValue,
@@ -26,7 +27,7 @@ from .workload import (GB, MB, GridConfig, build_catalog, build_topology,
                        generate_jobs, job_type_filesets)
 
 __all__ = [
-    "AccessHistory",
+    "AccessHistory", "OBS_MODES", "TelemetryReport",
     "FileInfo", "ReplicaCatalog", "ExperimentResult", "run_experiment",
     "ECON_BACKENDS", "EconomicValue", "FileValue", "PopularityValue",
     "ProposedReplication", "ReplicationOptimizer", "VALUE_MODELS",

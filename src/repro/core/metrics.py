@@ -20,6 +20,13 @@ class ExperimentResult:
     total_lan_gb: float
     makespan: float
     completed_jobs: int = 0      # jobs that actually produced a record
+    # engine-internal counters surfaced per run (PR 9): NetworkEngine
+    # kernel stats and the speculative-prefetch ledger
+    net_stats: dict = dataclasses.field(default_factory=dict)
+    prefetches: int = 0
+    prefetch_gb: float = 0.0
+    #: :class:`repro.obs.TelemetryReport` when an ``obs=`` mode is on
+    telemetry: object | None = None
 
 
 def run_experiment(
@@ -39,6 +46,8 @@ def run_experiment(
     net: str = "numpy",
     econ: str = "numpy",
     econ_interval: float | None = None,
+    obs: str | None = None,
+    obs_interval: float | None = None,
 ) -> ExperimentResult:
     """One full simulation run (the unit behind every paper figure).
 
@@ -78,6 +87,13 @@ def run_experiment(
     periodic optimizer only for the access-aware strategies
     (``economic`` / ``predictive``), an explicit value > 0 forces it on
     for any strategy, 0 disables it outright.
+
+    ``obs`` picks the telemetry mode (:data:`repro.obs.OBS_MODES`:
+    ``"off"``/``"report"``/``"series"``/``"trace"``; ``None`` defers to
+    the ``REPRO_OBS`` env override, default off) and ``obs_interval``
+    the sim-seconds between ring-buffer samples. Observation-only: every
+    metric above is bit-identical under any mode; the report lands on
+    ``ExperimentResult.telemetry``.
     """
     topology = build_topology(
         cfg, path_model="topmost" if net == "topmost" else "full")
@@ -86,7 +102,8 @@ def run_experiment(
                         strategy_mode=strategy_mode,
                         seed=cfg.seed, speculative_backups=speculative_backups,
                         broker=broker, batch_window=batch_window, net=net,
-                        econ=econ, econ_interval=econ_interval)
+                        econ=econ, econ_interval=econ_interval,
+                        obs=obs, obs_interval=obs_interval)
     for info in catalog.files.values():
         sim.storage.bootstrap(info.master_site, info.lfn)
     jobs = generate_jobs(cfg, n_jobs)
@@ -110,4 +127,8 @@ def run_experiment(
         total_wan_gb=res.total_wan_bytes / 1e9, total_lan_gb=res.total_lan_bytes / 1e9,
         makespan=res.makespan,
         completed_jobs=len(res.records),
+        net_stats=res.net_stats,
+        prefetches=res.prefetches,
+        prefetch_gb=res.prefetch_bytes / 1e9,
+        telemetry=res.telemetry,
     )

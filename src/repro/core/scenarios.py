@@ -22,6 +22,7 @@ import dataclasses
 import math
 import random as _random
 
+from ..obs import OBS_MODES
 from .economy import ECON_BACKENDS
 from .replica import STRATEGIES, STRATEGY_MODES
 from .scheduler import SCHEDULERS
@@ -130,6 +131,8 @@ class ScenarioSpec:
     net: str = "numpy"
     econ: str = "numpy"              # value-scoring backend of the economy
     econ_interval_s: float | None = None   # None=auto (access-aware strategies)
+    obs: str = "off"                 # telemetry mode (repro.obs.OBS_MODES)
+    obs_interval_s: float | None = None    # sim-seconds between OBS samples
     seeds: tuple[int, ...] = (0,)
 
     def __post_init__(self) -> None:
@@ -163,6 +166,9 @@ class ScenarioSpec:
         if self.econ not in ECON_BACKENDS:
             raise ValueError(f"{self.name}: unknown econ backend "
                              f"{self.econ!r} (want one of {ECON_BACKENDS})")
+        if self.obs not in OBS_MODES:
+            raise ValueError(f"{self.name}: unknown obs mode "
+                             f"{self.obs!r} (want one of {OBS_MODES})")
         if self.hotset_shifts < 0:
             raise ValueError(f"{self.name}: hotset_shifts must be >= 0")
         if self.hotset_shifts > 0 and self.zipf_alpha is None:

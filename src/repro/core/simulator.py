@@ -54,9 +54,11 @@ import collections
 import copy
 import dataclasses
 import heapq
+import os
 import random as _random
 from typing import Optional
 
+from ..obs import DEFAULT_OBS_INTERVAL_S, OBS_MODES, make_probe
 from .access import AccessHistory
 from .catalog import ReplicaCatalog
 from .economy import DEFAULT_INTERVAL_S, ECON_BACKENDS, ReplicationOptimizer
@@ -70,10 +72,19 @@ from .topology import GridTopology
 # events
 # --------------------------------------------------------------------------
 (SUBMIT, NET, CPU_DONE, FAIL, RECOVER, SLOW_START, SLOW_END, WATCHDOG,
- FLUSH, ECON) = range(10)
+ FLUSH, ECON, OBS) = range(11)
 
 EVENT_NAMES = ("SUBMIT", "NET", "CPU_DONE", "FAIL", "RECOVER", "SLOW_START",
-               "SLOW_END", "WATCHDOG", "FLUSH", "ECON")
+               "SLOW_END", "WATCHDOG", "FLUSH", "ECON", "OBS")
+
+#: Host-phase span charged for each handled event kind (telemetry only;
+#: ``None`` kinds are counted but not timed — they are rare control
+#: events). Nested spans (strategy planning inside a dispatch, a fused
+#: flush inside a NET completion) subtract out via the probe's
+#: exclusive-time accounting.
+_EVENT_PHASE = ("broker.dispatch", "net.events", "cpu.done", None, None,
+                None, None, None, "broker.dispatch", "econ.auction",
+                "obs.sample")
 
 #: Values the ``net=`` engine flag accepts: NetworkEngine backends plus
 #: ``"topmost"``, which keeps the numpy backend over a topology built with
@@ -147,6 +158,14 @@ class SimResult:
     total_wan_bytes: float
     total_lan_bytes: float
     makespan: float
+    # engine-internal counters surfaced per run (PR 9): the NetworkEngine's
+    # kernel stats (rerate_calls/rerate_slots/flush_passes/flush_slots) and
+    # the AccessHistory prefetch ledger — always populated, obs or not.
+    net_stats: dict = dataclasses.field(default_factory=dict)
+    prefetches: int = 0
+    prefetch_bytes: float = 0.0
+    #: :class:`repro.obs.TelemetryReport` when an ``obs=`` mode is on.
+    telemetry: Optional[object] = None
 
     @property
     def avg_job_time(self) -> float:
@@ -174,6 +193,8 @@ class GridSimulator:
         net: str = "numpy",
         econ: str = "numpy",
         econ_interval: Optional[float] = None,
+        obs: Optional[str] = None,
+        obs_interval: Optional[float] = None,
         sanitize: bool = False,
     ) -> None:
         self.topology = topology
@@ -251,6 +272,25 @@ class GridSimulator:
         else:
             self._econ = None
         self._econ_armed = False
+        # -- telemetry (repro.obs; off by default) ------------------------
+        # obs=None defers to the REPRO_OBS env override so existing entry
+        # points (the golden suites included) can run unchanged with
+        # telemetry forced on — the observation-only proof in CI. With
+        # obs off, self._obs is None and every hot-path guard below is a
+        # single `is None` check.
+        if obs is None:
+            obs = os.environ.get("REPRO_OBS", "off")
+        if obs not in OBS_MODES:
+            raise ValueError(f"unknown obs mode {obs!r} "
+                             f"(want one of {OBS_MODES})")
+        self._obs = make_probe(obs)
+        self._obs_interval = (DEFAULT_OBS_INTERVAL_S if obs_interval is None
+                              else obs_interval)
+        self._obs_armed = False
+        # time of the last handled *non-OBS* event: the makespan under an
+        # obs mode. Trailing OBS samples advance self.now past the real
+        # workload end; counting them would break observation-only.
+        self._obs_real_now = 0.0
         if broker == "jax":
             # deferred imports: jaxsched pulls in jax
             if self.scheduler.name == "dataaware":
@@ -374,7 +414,11 @@ class GridSimulator:
         self.network.advance(self.now)
 
     def _net_rerate(self, changed: tuple[int, ...] = ()) -> None:
-        eta = self.network.rerate(changed, self.now)
+        if self._obs is None:
+            eta = self.network.rerate(changed, self.now)
+        else:
+            with self._obs.span("net.rerate"):
+                eta = self.network.rerate(changed, self.now)
         if self.network.batched:
             # deferred: rerate only marked the engine dirty; the single
             # fused flush at the end of the drained instant re-rates and
@@ -392,7 +436,11 @@ class GridSimulator:
         net = self.network
         if not net.dirty:
             return
-        eta = net.flush(self.now)
+        if self._obs is None:
+            eta = net.flush(self.now)
+        else:
+            with self._obs.span("net.flush"):
+                eta = net.flush(self.now)
         self._net_version += 1
         if eta is not None:
             self._push(eta, NET, self._net_version)
@@ -414,8 +462,15 @@ class GridSimulator:
         link_ids = self.topology.link_ids_for(plan.src, plan.dst)
         # evictions + space reservation happen at transfer start
         if plan.store:
-            for victim in plan.evictions:
-                self.storage.remove(plan.dst, victim)
+            if plan.evictions and self._obs is not None:
+                self._obs.count("evict.transfers")
+                self._obs.count("evict.victims", len(plan.evictions))
+                with self._obs.span("evict.apply"):
+                    for victim in plan.evictions:
+                        self.storage.remove(plan.dst, victim)
+            else:
+                for victim in plan.evictions:
+                    self.storage.remove(plan.dst, victim)
             self.topology.sites[plan.dst].used_storage += size  # reserve
         self.storage.pin(plan.src, plan.lfn)   # source can't be evicted mid-copy
         self._tid += 1
@@ -534,7 +589,15 @@ class GridSimulator:
             self._schedule(batch[0])
             return
         assert self._jax_broker is not None
-        sites = self._jax_broker.select_batch([j.required for j in batch])
+        obs = self._obs
+        if obs is None:
+            sites = self._jax_broker.select_batch([j.required for j in batch])
+        else:
+            obs.count("broker.batches")
+            obs.count("broker.batch_jobs", len(batch))
+            with obs.span("broker.select_batch"):
+                sites = self._jax_broker.select_batch(
+                    [j.required for j in batch])
         if self._batched_strategy:
             # burst-level plan consumption: place everything first, then
             # plan every job's first fetch in one strategy_plan pass
@@ -564,11 +627,16 @@ class GridSimulator:
             return
         lfn = self._next_missing(js)
         if lfn is not None:
+            obs = self._obs
             plan = js.plan_cache.pop(lfn, None)
             if plan is not None:
                 plan = self._live_plan(plan)
             if plan is None:
-                plan = self.strategy.plan_fetch(lfn, js.site)
+                if obs is None:
+                    plan = self.strategy.plan_fetch(lfn, js.site)
+                else:
+                    with obs.span("strategy.plan"):
+                        plan = self.strategy.plan_fetch(lfn, js.site)
             js.pending_transfers += 1
             self._start_transfer(plan, js)
             return
@@ -589,9 +657,16 @@ class GridSimulator:
         brokers)."""
         pairs = [(lfn, js.site) for js in jss for lfn in js.missing]
         if pairs:
+            obs = self._obs
+            if obs is None:
+                plans = self.strategy.plan_batch(pairs)
+            else:
+                obs.count("strategy.plan_batch_calls")
+                obs.count("strategy.plan_batch_pairs", len(pairs))
+                with obs.span("strategy.plan"):
+                    plans = self.strategy.plan_batch(pairs)
             owners = (js for js in jss for _ in js.missing)
-            for js, (lfn, _), plan in zip(owners, pairs,
-                                          self.strategy.plan_batch(pairs)):
+            for js, (lfn, _), plan in zip(owners, pairs, plans):
                 js.plan_cache[lfn] = plan
         for js in jss:
             self._fetch_next(js)
@@ -605,15 +680,24 @@ class GridSimulator:
         chosen source itself is gone or a cheaper class of source has
         appeared (an inter-region plan whose file now has a regional
         copy)."""
+        obs = self._obs
         if plan.store and (plan.dst, plan.lfn) in self._inflight:
+            if obs is not None:
+                obs.count("plan_cache.keep")
             return plan      # piggybacks onto the in-flight transfer
         if not self.catalog.has_replica(plan.lfn, plan.src):
+            if obs is not None:
+                obs.count("plan_cache.replan")
             return None      # the chosen source was evicted since the burst
         if not (self.topology.sites[plan.src].online
                 or self.catalog.is_master(plan.lfn, plan.src)):
+            if obs is not None:
+                obs.count("plan_cache.replan")
             return None
         if plan.inter_region and self.catalog.duplicated_in_region(
                 plan.lfn, plan.dst, self.topology):
+            if obs is not None:
+                obs.count("plan_cache.replan")
             return None      # a regional copy appeared since the burst:
             # keeping the snapshot's WAN source would double-count
             # inter-region traffic the sequential pipeline avoids
@@ -628,13 +712,23 @@ class GridSimulator:
                             for l in plan.evictions)
                     and free + sum(self.catalog.size(l)
                                    for l in plan.evictions) >= need):
+                if obs is not None:
+                    obs.count("plan_cache.keep")
                 return plan
         elif plan.store:
             if free >= need:
+                if obs is not None:
+                    obs.count("plan_cache.keep")
                 return plan
         elif free < need:    # store=False stays the right call only
+            if obs is not None:
+                obs.count("plan_cache.keep")
             return plan      # while the file cannot fit
-        return self.strategy.refresh_plan(plan)
+        if obs is None:
+            return self.strategy.refresh_plan(plan)
+        obs.count("plan_cache.reverdict")
+        with obs.span("strategy.plan"):
+            return self.strategy.refresh_plan(plan)
 
     def _working_set_missing(self, js: _JobState) -> list[str]:
         return [f for f in js.job.required
@@ -737,6 +831,8 @@ class GridSimulator:
         job fetches — they occupy links and contend with job traffic, so
         the cost side of the economy is physically real."""
         assert self._econ is not None
+        if self._obs is not None:
+            self._obs.count("econ.rounds")
         self._net_advance()
         for prop in self._econ.step(self.now):
             # revalidate against the live state: an earlier winner in this
@@ -754,11 +850,32 @@ class GridSimulator:
                 self.catalog.size(l) for l in prop.evictions)
             if free < self.catalog.size(prop.lfn):
                 continue
+            if self._obs is not None:
+                self._obs.count("econ.prefetch_started")
             self._start_transfer(prop.to_plan(self.topology), None)
         if len(self.records) < self._n_expected:
             self._push(self.now + self._econ_interval, ECON, None)
         else:
             self._econ_armed = False   # workload drained; disarm
+
+    # -- telemetry sampling (repro.obs) --------------------------------------
+    def _obs_sample(self) -> None:
+        """One periodic OBS sampling round: append a row of grid-state
+        channels to the telemetry ring buffer. Strictly read-only over
+        engine state (simlint SL014), so the event's presence in the heap
+        never changes observable results — the same contract the
+        sanitizer's twin replay relies on (twins drop the probe on
+        deepcopy and their OBS events no-op here)."""
+        obs = self._obs
+        if obs is not None and obs.sampler is not None:
+            obs.sampler.sample(self)
+        # the repush depends only on the armed flag, not on the probe:
+        # sanitizer twins drop the probe on deepcopy but must keep the
+        # event stream (and hence the pending-queue digest) identical
+        if self._obs_armed and len(self.records) < self._n_expected:
+            self._push(self.now + self._obs_interval, OBS, None)
+        else:
+            self._obs_armed = False
 
     # -- failures / stragglers ----------------------------------------------
     def _fail_site(self, site: int) -> None:
@@ -828,6 +945,15 @@ class GridSimulator:
             # history holds a usable demand signal
             self._econ_armed = True
             self._push(self.now + self._econ_interval, ECON, None)
+        obs = self._obs
+        if obs is not None and obs.sampler is not None and \
+                not self._obs_armed and self._obs_interval > 0:
+            # sim-time sampling clock, mirroring the ECON arming: one
+            # baseline sample now, then one OBS event per interval until
+            # the workload drains
+            self._obs_armed = True
+            obs.sampler.sample(self)
+            self._push(self.now + self._obs_interval, OBS, None)
         batched = self.network.batched
         while self._q:
             if self.sanitize:
@@ -850,16 +976,41 @@ class GridSimulator:
             self.now = t
             self._handle(kind, payload)
         total_ic = sum(r.inter_comms for r in self.records)
+        telemetry = None
+        makespan = self.now
+        if obs is not None:
+            makespan = self._obs_real_now
+            obs.merge_counters("net", self.network.stats)
+            telemetry = obs.finalize(net_stats=self.network.stats)
         return SimResult(
             records=self.records,
             total_inter_comms=total_ic,
             total_wan_bytes=self.total_wan_bytes,
             total_lan_bytes=self.total_lan_bytes,
-            makespan=self.now,
+            makespan=makespan,
+            net_stats=dict(self.network.stats),
+            prefetches=self.access.prefetches,
+            prefetch_bytes=self.access.prefetch_bytes,
+            telemetry=telemetry,
         )
 
     def _handle(self, kind: int, payload: object) -> None:
-        """Dispatch one popped event (``self.now`` already advanced)."""
+        """Dispatch one popped event (``self.now`` already advanced),
+        charging its telemetry phase when a probe is attached — the one
+        per-event hot-path branch the obs="off" contract allows."""
+        obs = self._obs
+        if obs is None:
+            return self._handle_event(kind, payload)
+        if kind != OBS:
+            self._obs_real_now = self.now
+        obs.event(EVENT_NAMES[kind], self.now)
+        phase = _EVENT_PHASE[kind]
+        if phase is None:
+            return self._handle_event(kind, payload)
+        with obs.span(phase):
+            return self._handle_event(kind, payload)
+
+    def _handle_event(self, kind: int, payload: object) -> None:
         t = self.now
         if kind == SUBMIT:
             # submit_time was stamped at first submission; resubmitted
@@ -921,6 +1072,8 @@ class GridSimulator:
             self._watchdog(payload)  # type: ignore[arg-type]
         elif kind == ECON:
             self._econ_round()
+        elif kind == OBS:
+            self._obs_sample()
 
     # -- tie-race sanitizer ------------------------------------------------
     def _sanitize_step(self, until: float) -> bool:

@@ -56,17 +56,30 @@ def run_spec(spec: ScenarioSpec, *, seed: int | None = None,
         arrival_burst=spec.arrival_burst,
         arrival_times=arrival_schedule(spec, n, seed=seed),
         net=spec.net, econ=spec.econ, econ_interval=spec.econ_interval_s,
+        # "off" lowers to None so the REPRO_OBS env override still applies
+        # to registry scenarios that don't pin a telemetry mode
+        obs=None if spec.obs == "off" else spec.obs,
+        obs_interval=spec.obs_interval_s,
     )
 
 
 def run_scenario(spec: ScenarioSpec, *, n_jobs: int | None = None,
-                 seeds: Sequence[int] | None = None) -> list[dict]:
-    """Run a spec once per seed; one machine-readable row per run."""
+                 seeds: Sequence[int] | None = None,
+                 obs_dir: str | None = None) -> list[dict]:
+    """Run a spec once per seed; one machine-readable row per run.
+
+    When the run carries telemetry (``spec.obs`` or the ``REPRO_OBS``
+    override), each row additionally gets the measured four-phase wall
+    breakdown (``"phases"``: dispatch / strategy_plan / flush / other
+    seconds, partitioning ``wall_s``) and the probe counters. With
+    ``obs_dir`` set, the full telemetry JSON — and in trace mode the
+    Perfetto trace + JSONL event log — is written there per run.
+    """
     rows = []
     for seed in (spec.seeds if seeds is None else seeds):
         t0 = time.perf_counter()
         r = run_spec(spec, seed=seed, n_jobs=n_jobs)
-        rows.append({
+        row = {
             "scenario": spec.name, "seed": seed, "n_jobs": r.n_jobs,
             "wall_s": round(time.perf_counter() - t0, 3),
             "avg_job_time_s": r.avg_job_time,
@@ -74,7 +87,20 @@ def run_scenario(spec: ScenarioSpec, *, n_jobs: int | None = None,
             "completed_jobs": r.completed_jobs,
             "makespan_s": r.makespan,
             "total_wan_gb": r.total_wan_gb,
-        })
+        }
+        tel = r.telemetry
+        if tel is not None:
+            row["phases"] = tel.phase_breakdown(row["wall_s"])
+            row["counters"] = dict(sorted(tel.counters.items()))
+            if obs_dir is not None:
+                os.makedirs(obs_dir, exist_ok=True)
+                stem = os.path.join(obs_dir, f"{spec.name}_s{seed}")
+                with open(stem + ".telemetry.json", "w") as f:
+                    json.dump(tel.to_dict(), f, indent=1)
+                if tel.trace is not None:
+                    tel.save_trace(stem + ".trace.json")
+                    tel.save_events_jsonl(stem + ".events.jsonl")
+        rows.append(row)
     return rows
 
 
@@ -94,10 +120,14 @@ def run_sweep_spec(sweep: SweepSpec, *, n_jobs: int | None = None) -> dict:
 
 
 def run_scenarios(names: Iterable[str], *, n_jobs: int | None = None,
-                  out_path: str | None = None, quiet: bool = False) -> dict:
+                  out_path: str | None = None, quiet: bool = False,
+                  obs: str | None = None,
+                  obs_dir: str | None = None) -> dict:
     """Run each named scenario *or sweep* and write
     ``BENCH_scenarios.json`` (scenarios as points under ``"scenarios"``,
-    sweeps as grids under ``"sweeps"``)."""
+    sweeps as grids under ``"sweeps"``). ``obs`` overrides every
+    scenario's telemetry mode; ``obs_dir`` receives the per-run
+    telemetry/trace exports (see :func:`run_scenario`)."""
     payload: dict = {"n_jobs_override": n_jobs, "scenarios": {}, "sweeps": {}}
     for name in names:
         if name in SWEEPS:
@@ -109,7 +139,9 @@ def run_scenarios(names: Iterable[str], *, n_jobs: int | None = None,
                       f"{sw['values']} rows={len(entry['rows'])}")
             continue
         spec = get_scenario(name)
-        rows = run_scenario(spec, n_jobs=n_jobs)
+        if obs is not None:
+            spec = dataclasses.replace(spec, obs=obs)
+        rows = run_scenario(spec, n_jobs=n_jobs, obs_dir=obs_dir)
         payload["scenarios"][name] = {"spec": spec.to_dict(), "rows": rows}
         if not quiet:
             r = rows[0]
@@ -164,6 +196,13 @@ def main(argv: Sequence[str] | None = None) -> None:
                     help="override every scenario's job count")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default results/BENCH_scenarios.json)")
+    ap.add_argument("--obs", default=None, metavar="MODE",
+                    help="telemetry mode override for every scenario "
+                         "(off|report|series|trace; see docs/OBSERVABILITY.md)")
+    ap.add_argument("--obs-dir", default=None, metavar="DIR",
+                    help="write per-run telemetry JSON (and, with "
+                         "--obs trace, Perfetto trace + JSONL event log) "
+                         "into DIR")
     args = ap.parse_args(argv)
 
     if args.list:
@@ -180,7 +219,8 @@ def main(argv: Sequence[str] | None = None) -> None:
     for name in names:
         if name not in SWEEPS:
             get_scenario(name)  # fail fast on typos before running anything
-    run_scenarios(names, n_jobs=args.jobs, out_path=args.out)
+    run_scenarios(names, n_jobs=args.jobs, out_path=args.out,
+                  obs=args.obs, obs_dir=args.obs_dir)
 
 
 if __name__ == "__main__":

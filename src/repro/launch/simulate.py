@@ -16,8 +16,9 @@ from __future__ import annotations
 import argparse
 import dataclasses
 
-from repro.core import (ChurnSpec, ECON_BACKENDS, SCENARIOS, STRATEGIES,
-                        STRATEGY_MODES, SCHEDULERS, ScenarioSpec, get_scenario)
+from repro.core import (ChurnSpec, ECON_BACKENDS, OBS_MODES, SCENARIOS,
+                        STRATEGIES, STRATEGY_MODES, SCHEDULERS, ScenarioSpec,
+                        get_scenario)
 from repro.core.simulator import NETS
 from repro.launch.experiments import run_spec
 
@@ -52,6 +53,13 @@ def main() -> None:
                     help="seconds between proactive-replication rounds "
                          "(default: auto — armed only for the economic/"
                          "predictive strategies; 0 disables)")
+    ap.add_argument("--obs", default=None, choices=list(OBS_MODES),
+                    help="telemetry mode (default: the scenario's, or off; "
+                         "report/series/trace print the measured phase "
+                         "breakdown per run — see docs/OBSERVABILITY.md)")
+    ap.add_argument("--obs-interval", type=float, default=None,
+                    help="sim-seconds between telemetry ring-buffer samples "
+                         "(series/trace modes; default 300)")
     ap.add_argument("--failures", type=int, default=0,
                     help="number of random site failures to inject")
     args = ap.parse_args()
@@ -80,6 +88,10 @@ def main() -> None:
         spec = dataclasses.replace(spec, strategy_mode=args.strategy_mode)
     if args.econ_interval is not None:
         spec = dataclasses.replace(spec, econ_interval_s=args.econ_interval)
+    if args.obs is not None:
+        spec = dataclasses.replace(spec, obs=args.obs)
+    if args.obs_interval is not None:
+        spec = dataclasses.replace(spec, obs_interval_s=args.obs_interval)
     print(f"{'strategy':>14} {'avg_job_time':>13} {'inter/job':>10} "
           f"{'WAN GB':>8} {'makespan':>10}")
     for strat in args.strategy:
@@ -87,6 +99,14 @@ def main() -> None:
                      seed=args.seed, n_jobs=args.jobs)
         print(f"{strat:>14} {r.avg_job_time:>12.0f}s {r.avg_inter_comms:>10.2f} "
               f"{r.total_wan_gb:>8.1f} {r.makespan:>9.0f}s")
+        if r.telemetry is not None:
+            ph = r.telemetry.phase_breakdown()
+            print(f"{'':>14} phases[s]: "
+                  f"dispatch={ph['dispatch_s']:.3f} "
+                  f"strategy_plan={ph['strategy_plan_s']:.3f} "
+                  f"flush={ph['flush_s']:.3f} other={ph['other_s']:.3f} "
+                  f"(wall={r.telemetry.wall_s:.3f}, "
+                  f"samples={r.telemetry.n_samples})")
 
 
 if __name__ == "__main__":

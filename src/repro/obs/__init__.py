@@ -1,0 +1,44 @@
+"""repro.obs — phase-timed, trace-exporting telemetry for the simulator.
+
+Zero-overhead-when-disabled observability layer (PR 9). The simulator,
+brokers, batched strategy planner, network engine, and economy are
+instrumented with :class:`~repro.obs.probe.Probe` spans and counters;
+``obs=`` engine flags (plumbed like ``net=``/``econ=`` through
+``GridSimulator``, ``run_experiment``, ``ScenarioSpec``, and
+``launch/simulate.py``) select how much is collected:
+
+========  ============================================================
+mode      collects
+========  ============================================================
+off       nothing — hot paths pay a single ``is None`` check (default)
+report    host-phase timers + counters -> :class:`TelemetryReport`
+series    report + sim-time ring-buffer channels (periodic OBS event)
+trace     series + Chrome trace (Perfetto) JSON and JSONL event log
+========  ============================================================
+
+The layer is observation-only: enabling any mode leaves every golden
+metric bit-identical (the same contract ``sanitize=True`` honors), and
+simlint rule SL014 machine-checks that obs callbacks never mutate
+simulator/catalog/storage state. See ``docs/OBSERVABILITY.md``.
+"""
+
+from .probe import (DEFAULT_OBS_INTERVAL_S, OBS_MODES, Probe, make_probe)
+from .report import (DISPATCH_PHASES, FLUSH_PHASES, PLAN_PHASES,
+                     TelemetryReport)
+from .series import CHANNELS, GridSampler, RingBuffer
+from .trace import TraceWriter
+
+__all__ = [
+    "CHANNELS",
+    "DEFAULT_OBS_INTERVAL_S",
+    "DISPATCH_PHASES",
+    "FLUSH_PHASES",
+    "GridSampler",
+    "OBS_MODES",
+    "PLAN_PHASES",
+    "Probe",
+    "RingBuffer",
+    "TelemetryReport",
+    "TraceWriter",
+    "make_probe",
+]

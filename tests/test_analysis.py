@@ -167,6 +167,18 @@ def test_sl005_scope_excludes_fault_instrumentation():
     """, path="repro/fault/failures.py")
 
 
+def test_sl005_obs_package_is_the_sanctioned_exemption():
+    # the telemetry probe measures host phase time by design; SL014
+    # guards the other direction (it cannot write engine state)
+    src = """
+        import time
+        def f():
+            return time.perf_counter()
+    """
+    assert "SL005" not in rules_of(src, path="repro/obs/probe.py")
+    assert "SL005" in rules_of(src, path="repro/core/simulator.py")
+
+
 # -- SL010: heappush tie key ------------------------------------------------
 
 def test_sl010_flags_missing_seq_key():
@@ -263,6 +275,44 @@ def test_sl012_transitive_sync_counts():
     assert "SL012" not in rules_of(src)
 
 
+# -- SL014: obs callbacks are observation-only ------------------------------
+
+def test_sl014_flags_mutating_call_on_parameter():
+    assert "SL014" in rules_of("""
+        class Sampler:
+            def sample(self, sim):
+                sim.records.append(1)
+    """, path="repro/obs/series.py")
+
+
+def test_sl014_flags_write_through_parameter():
+    src = """
+        def f(sim):
+            sim.now = 0.0
+            sim.network.link_act[0] += 1.0
+            del sim._cpu_queue[0]
+    """
+    rules = rules_of(src, path="repro/obs/series.py")
+    assert rules.count("SL014") == 3
+
+
+def test_sl014_reads_and_self_mutation_are_clean():
+    assert rules_of("""
+        class Sampler:
+            def sample(self, sim):
+                n = len(sim.records) + sim.network.n_active
+                self.ring.append((sim.now, float(n)))
+    """, path="repro/obs/series.py") == []
+
+
+def test_sl014_scoped_to_obs_package():
+    # the same mutation outside repro/obs/ is not SL014's business
+    assert "SL014" not in rules_of("""
+        def f(sim):
+            sim.records.append(1)
+    """, path="repro/core/simulator.py")
+
+
 # -- suppressions + baseline ------------------------------------------------
 
 def test_inline_same_line_suppression():
@@ -321,7 +371,7 @@ def test_collect_files_covers_tree():
 
 def test_rule_catalog_matches_emitted_rules():
     emitted = {"SL001", "SL002", "SL003", "SL004", "SL005", "SL010",
-               "SL011", "SL012"}
+               "SL011", "SL012", "SL013", "SL014"}
     assert emitted <= set(RULES)
 
 

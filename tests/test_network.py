@@ -210,6 +210,27 @@ def test_device_per_event_work_independent_of_backlog():
     assert np.array_equal(net_dev.rate[:528], net_np.rate[:528])
 
 
+def test_engine_counters_surface_through_results():
+    """The per-engine work counters asserted above must also be readable
+    from a finished run — SimResult/ExperimentResult carry
+    ``NetworkEngine.stats`` so the saturated-backlog regression can be
+    re-checked on real workloads without reaching into the engine."""
+    cfg = GridConfig(n_regions=2, sites_per_region=3)
+    inc = run_experiment(cfg, n_jobs=80)                 # incremental numpy
+    dev = run_experiment(cfg, n_jobs=80, net="device")   # batched device
+    assert set(inc.net_stats) == {"rerate_calls", "rerate_slots",
+                                  "flush_passes", "flush_slots"}
+    # incremental engine: per-event union re-rates, never a fused flush
+    assert inc.net_stats["rerate_slots"] > 0
+    assert inc.net_stats["flush_passes"] == 0
+    # batched engine: zero per-event slot work, all work in flush passes
+    assert dev.net_stats["rerate_slots"] == 0
+    assert dev.net_stats["flush_passes"] > 0
+    assert dev.net_stats["flush_slots"] > 0
+    # both engines saw the same event stream
+    assert dev.net_stats["rerate_calls"] == inc.net_stats["rerate_calls"]
+
+
 def test_engine_release_and_regrow():
     topo = _topo((2, 2), (10.0,))
     net = NetworkEngine(topo)
