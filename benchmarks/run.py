@@ -38,6 +38,8 @@ import dataclasses
 import json
 import os
 
+from repro.core.quantities import US_PER_S
+
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 
 STRATS = ("hrs", "bhr", "lru")
@@ -411,7 +413,7 @@ def net_sweep(n_jobs: int = 10000) -> None:
                 r = run_spec(spec, n_jobs=n_jobs)
             fidelity.append({
                 "scenario": scen, "net": net, "n_jobs": n_jobs,
-                "wall_s": round(p.elapsed_us(cell) / 1e6, 3),
+                "wall_s": round(p.elapsed_us(cell) / US_PER_S, 3),
                 "avg_job_time_s": r.avg_job_time,
                 "avg_inter_comms": r.avg_inter_comms,
                 "total_wan_gb": r.total_wan_gb,
@@ -427,7 +429,7 @@ def net_sweep(n_jobs: int = 10000) -> None:
             r = run_spec(spec, n_jobs=n_jobs)
         perf.append({
             "scenario": "bulk_diana", "net": net, "n_jobs": n_jobs,
-            "wall_s": round(p.elapsed_us(cell) / 1e6, 3),
+            "wall_s": round(p.elapsed_us(cell) / US_PER_S, 3),
             "avg_job_time_s": r.avg_job_time,
             "completed_jobs": r.completed_jobs,
         })
@@ -435,7 +437,7 @@ def net_sweep(n_jobs: int = 10000) -> None:
     with open(os.path.join(RESULTS_DIR, "BENCH_net.json"), "w") as f:
         json.dump({"n_jobs": n_jobs, "fidelity": fidelity, "perf": perf},
                   f, indent=1)
-    us = sum(p.phase_total_s.values()) * 1e6 / (len(fidelity) + len(perf))
+    us = sum(p.phase_total_s.values()) * US_PER_S / (len(fidelity) + len(perf))
     by = {(r["scenario"], r["net"]): r for r in fidelity}
     d5 = (by[("deep_5tier", "numpy")]["avg_job_time_s"]
           / by[("deep_5tier", "topmost")]["avg_job_time_s"] - 1.0)

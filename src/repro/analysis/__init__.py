@@ -16,9 +16,17 @@ catalog and suppression syntax):
   the engine objects they observe.
 * **jaxpr audit** (:mod:`repro.analysis.jaxpr_audit`) — traces every
   registered kernel (:func:`repro.kernels.registered_kernels`) and checks
-  rank ceilings, dtype discipline, host-callback freedom and per-equation
-  intermediate-size budgets. Requires jax; the CLI auto-skips it when jax
-  is unavailable.
+  rank ceilings, dtype discipline, host-callback freedom, per-equation
+  intermediate-size budgets and per-operand unit signatures. Requires
+  jax; the CLI auto-skips it when jax is unavailable.
+* **units** (:mod:`repro.analysis.units`, ``--units``) — unit/dimension
+  inference over the dimension-carrying modules on the
+  :mod:`repro.analysis.dataflow` framework: cross-dimension arithmetic
+  and comparisons, missing Mbps->bytes/s conversions, sim-/wall-clock
+  mixing, raw conversion literals (rules SL020-SL025).
+* **conserve** (:mod:`repro.analysis.conserve`, ``--conserve``) —
+  runtime conservation auditor: replays scenarios and asserts the byte /
+  storage / prefetch ledgers close exactly.
 
 Run as ``python -m repro.analysis`` (see ``--help``); CI gates on
 ``--fail-on-findings``.
@@ -33,8 +41,8 @@ from .findings import Baseline, Finding, inline_suppressions, is_inline_suppress
 from .simlint import lint_source
 
 __all__ = [
-    "Baseline", "Finding", "RULES", "analyze_file", "collect_files",
-    "default_target", "run_analysis",
+    "Baseline", "Finding", "RULES", "RULE_FAMILIES", "analyze_file",
+    "collect_files", "default_target", "run_analysis",
 ]
 
 #: Rule catalog: id -> one-line description (``--list-rules``).
@@ -60,7 +68,26 @@ RULES: dict[str, str] = {
              "mutated inside it without _notify",
     "SL014": "obs telemetry code mutates an object received as a "
              "parameter (probe callbacks are observation-only)",
+    "SL020": "adding/subtracting values of different dimensions "
+             "(bytes + seconds, ...)",
+    "SL021": "comparing values of different dimensions",
+    "SL022": "Mbps-vocabulary value used where bytes/s is declared, "
+             "without the MBPS_TO_BYTES_PER_S conversion",
+    "SL023": "sim-clock and wall-clock time mixed in one expression",
+    "SL024": "raw conversion literal (1e6, 1e9, 125000.0, ...) scales a "
+             "dimensioned value outside repro.core.quantities",
+    "SL025": "assignment or keyword binding contradicts the declared "
+             "dimension of its target",
 }
+
+#: ``--list-rules`` grouping: family name -> rule-id prefix test.
+RULE_FAMILIES: tuple[tuple[str, tuple[str, ...]], ...] = (
+    ("determinism (simlint)",
+     ("SL001", "SL002", "SL003", "SL004", "SL005", "SL010")),
+    ("coherence", ("SL011", "SL012", "SL013")),
+    ("obs", ("SL014",)),
+    ("units", ("SL020", "SL021", "SL022", "SL023", "SL024", "SL025")),
+)
 
 #: Files skipped entirely (the linter's own test fixtures would flag).
 _SKIP_PARTS = ("__pycache__",)

@@ -1,21 +1,25 @@
 """CLI for ``python -m repro.analysis``.
 
 Default run: both static passes (simlint + coherence) over ``src/repro``
-plus the jaxpr kernel audit when jax is importable. ``--fail-on-findings``
-makes any unsuppressed finding (or audit failure) exit non-zero — this is
-what CI gates on.
+plus the jaxpr kernel audit when jax is importable. ``--units`` adds the
+unit/dimension pass (writes ``results/ANALYSIS_units.json``),
+``--conserve`` the runtime conservation-audit smoke.
+``--fail-on-findings`` makes any unsuppressed finding (or audit/
+conservation failure) exit non-zero — this is what CI gates on.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from pathlib import Path
 
-from . import RULES, Baseline, default_target, run_analysis
+from . import RULE_FAMILIES, RULES, Baseline, default_target, run_analysis
 
 DEFAULT_BASELINE = "analysis_baseline.json"
 DEFAULT_KERNELS_JSON = "results/ANALYSIS_kernels.json"
+DEFAULT_UNITS_JSON = "results/ANALYSIS_units.json"
 
 
 def _jax_available() -> bool:
@@ -58,13 +62,34 @@ def main(argv: list[str] | None = None) -> int:
     parser.add_argument("--tierace", action="store_true",
                         help="also run the dynamic tie-race sanitizer "
                              "smoke scenario and print its report")
+    parser.add_argument("--units", action="store_true",
+                        help="also run the unit/dimension checker over the "
+                             "dimension-carrying modules and write "
+                             f"{DEFAULT_UNITS_JSON}")
+    parser.add_argument("--units-json", type=Path,
+                        default=Path(DEFAULT_UNITS_JSON),
+                        help="where the units report is written "
+                             f"(default: {DEFAULT_UNITS_JSON})")
+    parser.add_argument("--conserve", action="store_true",
+                        help="also run the runtime conservation-audit "
+                             "smoke (ledger-closure invariants)")
     parser.add_argument("--list-rules", action="store_true",
-                        help="print the rule catalog and exit")
+                        help="print the rule catalog (grouped by family) "
+                             "and exit")
     args = parser.parse_args(argv)
 
     if args.list_rules:
-        for rule, desc in sorted(RULES.items()):
-            print(f"{rule}  {desc}")
+        listed: set[str] = set()
+        for family, rules in RULE_FAMILIES:
+            print(f"{family}:")
+            for rule in rules:
+                print(f"  {rule}  {RULES[rule]}")
+                listed.add(rule)
+        leftover = sorted(set(RULES) - listed)     # never drop a rule
+        if leftover:
+            print("other:")
+            for rule in leftover:
+                print(f"  {rule}  {RULES[rule]}")
         return 0
 
     failed = False
@@ -109,6 +134,36 @@ def main(argv: list[str] | None = None) -> int:
         print(f"jaxpr audit: {len(report['kernels'])} kernel(s), "
               f"{len(failures)} failure(s) -> {args.kernels_json}")
         failed |= bool(failures)
+
+    # -- unit/dimension pass -----------------------------------------------
+    if args.units:
+        from .units import run_units
+        findings, inline, report = run_units(
+            [str(p) for p in args.paths] if args.paths else None)
+        for finding in findings:
+            print(finding.render())
+        args.units_json.parent.mkdir(parents=True, exist_ok=True)
+        args.units_json.write_text(
+            json.dumps(report, indent=2, sort_keys=True) + "\n")
+        print(f"units: {len(findings)} finding(s), {inline} "
+              f"inline-suppressed, {len(report['files'])} file(s) "
+              f"-> {args.units_json}")
+        failed |= bool(findings)
+
+    # -- runtime conservation audit ----------------------------------------
+    if args.conserve:
+        from .conserve import run_conservation_smoke
+        for rep in run_conservation_smoke():
+            bad = [n for n, c in rep["checks"].items() if not c["ok"]]
+            status = "ok" if rep["ok"] else f"FAIL ({', '.join(bad)})"
+            print(f"conserve: {rep['scenario']} ({rep['n_jobs']} jobs, "
+                  f"net={rep['net']}): {len(rep['checks'])} invariant(s) "
+                  f"{status}")
+            for name in bad:
+                c = rep["checks"][name]
+                print(f"  FAIL {name}: lhs={c['lhs']} rhs={c['rhs']} "
+                      f"({c['what']})")
+            failed |= not rep["ok"]
 
     # -- dynamic tie-race smoke --------------------------------------------
     if args.tierace:

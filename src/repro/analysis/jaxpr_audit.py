@@ -25,6 +25,11 @@ jaxpr, nested sub-jaxprs included:
   size; the estimate is deliberately simple and conservative — it
   exists to catch order-of-magnitude regressions (a materialized
   logits plane, a dense scan state), not to model XLA buffer reuse.
+* **units** — every spec declares a complete per-operand dimension
+  signature (``arg_units`` one entry per ``make_inputs`` arg,
+  ``out_units`` nonempty, vocabulary :data:`repro.analysis.units.
+  DIMENSIONS`); the signature is recorded alongside the structural
+  evidence so the JSON doubles as the kernels' unit registry.
 
 Runtime oracle checks (sim kernels, ``make_small_inputs``):
 
@@ -44,9 +49,24 @@ from typing import Any
 
 import numpy as np
 
+from .units import DIMENSIONS
+
 #: substrings identifying host-callback primitives in any jax version
 CALLBACK_PRIMITIVES = ("callback", "outside_call", "host_call",
                       "infeed", "outfeed")
+
+
+def check_unit_signature(spec, n_args: int) -> bool:
+    """True when the spec's dimension signature is complete and valid.
+
+    jax-free (operates on the spec alone) so the kernels-interpret CI
+    job can assert it without tracing.
+    """
+    arg_units = tuple(getattr(spec, "arg_units", ()))
+    out_units = tuple(getattr(spec, "out_units", ()))
+    return (len(arg_units) == n_args
+            and len(out_units) > 0
+            and all(u in DIMENSIONS for u in arg_units + out_units))
 
 
 def _iter_eqns(jaxpr):
@@ -108,10 +128,13 @@ def audit_kernel(spec) -> dict[str, Any]:
         "budget_ok": peak_bytes <= spec.budget_bytes,
         "no_callbacks": not callbacks,
         "f32_trace_has_no_f64": not bad_dtypes,
+        "units_declared": check_unit_signature(spec, len(args)),
     }
     report: dict[str, Any] = {
         "domain": spec.domain,
         "audit_shapes": [list(np.shape(a)) for a in args],
+        "arg_units": list(getattr(spec, "arg_units", ())),
+        "out_units": list(getattr(spec, "out_units", ())),
         "n_eqns": n_eqns,
         "max_rank": max_rank,
         "max_rank_allowed": spec.max_rank,

@@ -42,7 +42,7 @@ from __future__ import annotations
 import ast
 from typing import Optional
 
-from .findings import Finding
+from .dataflow import FlowAnalysis
 
 SET_ANNOTATIONS = frozenset(
     {"set", "frozenset", "Set", "FrozenSet", "AbstractSet", "MutableSet"})
@@ -111,48 +111,34 @@ def _ann_kind(ann: ast.expr | None) -> Optional[str]:
     return None
 
 
-class _Linter(ast.NodeVisitor):
+class _Linter(FlowAnalysis):
+    """Determinism rules riding on the dataflow framework.
+
+    Runs in single-pass mode (``fixpoint = False``) — the visiting order
+    and env semantics are exactly the pre-framework linter's, which
+    keeps the finding corpus identical (pinned by tests/test_units.py).
+    Labels: ``'set'`` / ``'container_of_set'``.
+    """
+
     def __init__(self, path: str, source: str):
-        self.path = path
-        self.lines = source.splitlines()
-        self.findings: list[Finding] = []
-        self.module_aliases: dict[str, str] = {}   # name -> module path
-        self.from_imports: dict[str, str] = {}     # name -> "module.func"
-        # name/attr -> 'set' | 'container_of_set' (scope-stacked)
-        self.env_stack: list[dict[str, str]] = [{}]
-        self.attr_env_stack: list[dict[str, str]] = [{}]
+        super().__init__(path, source)
         self.in_sim_path = (any(s in path for s in SIM_STATE_PATHS)
                             and not any(s in path
                                         for s in SL005_EXEMPT_PATHS))
 
-    # -- plumbing ---------------------------------------------------------
-
-    def flag(self, rule: str, node: ast.AST, message: str) -> None:
-        line = getattr(node, "lineno", 1)
-        snippet = (self.lines[line - 1].strip()
-                   if 0 < line <= len(self.lines) else "")
-        self.findings.append(
-            Finding(rule=rule, path=self.path, line=line, message=message,
-                    snippet=snippet))
-
-    @property
-    def env(self) -> dict[str, str]:
-        return self.env_stack[-1]
-
-    @property
-    def attr_env(self) -> dict[str, str]:
-        return self.attr_env_stack[-1]
-
     # -- set-expression classification ------------------------------------
 
-    def _expr_kind(self, node: ast.expr | None) -> Optional[str]:
+    def ann_label(self, ann: ast.expr | None) -> Optional[str]:
+        return _ann_kind(ann)
+
+    def expr_label(self, node: ast.expr | None) -> Optional[str]:
         if node is None:
             return None
         if isinstance(node, (ast.Set, ast.SetComp)):
             return "set"
         if isinstance(node, ast.ListComp):
             return ("container_of_set"
-                    if self._expr_kind(node.elt) == "set" else None)
+                    if self.expr_label(node.elt) == "set" else None)
         if isinstance(node, ast.Name):
             return self.env.get(node.id)
         if isinstance(node, ast.Attribute):
@@ -161,18 +147,18 @@ class _Linter(ast.NodeVisitor):
                 return self.attr_env.get(node.attr)
             return None
         if isinstance(node, ast.Subscript):
-            if self._expr_kind(node.value) == "container_of_set":
+            if self.expr_label(node.value) == "container_of_set":
                 return "set"
             return None
         if isinstance(node, ast.BinOp) and isinstance(
                 node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)):
-            left, right = self._expr_kind(node.left), \
-                self._expr_kind(node.right)
+            left, right = self.expr_label(node.left), \
+                self.expr_label(node.right)
             if "set" in (left, right):
                 return "set"
             return None
         if isinstance(node, ast.IfExp):
-            return self._expr_kind(node.body) or self._expr_kind(node.orelse)
+            return self.expr_label(node.body) or self.expr_label(node.orelse)
         if isinstance(node, ast.Call):
             fn = node.func
             if isinstance(fn, ast.Name) and fn.id in ("set", "frozenset"):
@@ -181,81 +167,13 @@ class _Linter(ast.NodeVisitor):
                 if fn.attr in SET_RETURNING_METHODS:
                     return "set"
                 if (fn.attr in SET_METHODS
-                        and self._expr_kind(fn.value) == "set"):
+                        and self.expr_label(fn.value) == "set"):
                     return "set"
             return None
         return None
 
     def _is_set(self, node: ast.expr | None) -> bool:
-        return self._expr_kind(node) == "set"
-
-    # -- imports ----------------------------------------------------------
-
-    def visit_Import(self, node: ast.Import) -> None:
-        for alias in node.names:
-            self.module_aliases[alias.asname or
-                                alias.name.split(".")[0]] = alias.name
-
-    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
-        for alias in node.names:
-            if node.module:
-                self.from_imports[alias.asname or alias.name] = \
-                    f"{node.module}.{alias.name}"
-
-    # -- scope handling ----------------------------------------------------
-
-    def visit_ClassDef(self, node: ast.ClassDef) -> None:
-        # pre-pass: collect `self.X` attributes assigned/annotated as sets
-        # anywhere in the class, so method bodies can classify them.
-        attrs: dict[str, str] = {}
-        for sub in ast.walk(node):
-            target = None
-            kind = None
-            if isinstance(sub, ast.AnnAssign) and isinstance(
-                    sub.target, ast.Attribute):
-                target, kind = sub.target, _ann_kind(sub.annotation)
-            elif isinstance(sub, ast.Assign) and len(sub.targets) == 1 \
-                    and isinstance(sub.targets[0], ast.Attribute):
-                target = sub.targets[0]
-            if (target is not None and isinstance(target.value, ast.Name)
-                    and target.value.id == "self"):
-                if kind is None and isinstance(sub, ast.Assign):
-                    kind = self._expr_kind(sub.value)
-                if kind is not None:
-                    attrs[target.attr] = kind
-        self.attr_env_stack.append(attrs)
-        self.generic_visit(node)
-        self.attr_env_stack.pop()
-
-    def _visit_function(self, node) -> None:
-        env = dict(self.env)         # closures see enclosing bindings
-        for arg in (node.args.posonlyargs + node.args.args
-                    + node.args.kwonlyargs):
-            kind = _ann_kind(arg.annotation)
-            if kind is not None:
-                env[arg.arg] = kind
-        self.env_stack.append(env)
-        self.generic_visit(node)
-        self.env_stack.pop()
-
-    visit_FunctionDef = _visit_function
-    visit_AsyncFunctionDef = _visit_function
-
-    def visit_Assign(self, node: ast.Assign) -> None:
-        self.generic_visit(node)
-        kind = self._expr_kind(node.value)
-        for t in node.targets:
-            if isinstance(t, ast.Name):
-                if kind is not None:
-                    self.env[t.id] = kind
-                else:
-                    self.env.pop(t.id, None)
-
-    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
-        self.generic_visit(node)
-        kind = _ann_kind(node.annotation) or self._expr_kind(node.value)
-        if isinstance(node.target, ast.Name) and kind is not None:
-            self.env[node.target.id] = kind
+        return self.expr_label(node) == "set"
 
     # -- SL001 iteration sites ---------------------------------------------
 
@@ -293,30 +211,9 @@ class _Linter(ast.NodeVisitor):
 
     # -- calls: consumers, PRNG, clocks, heappush, key= --------------------
 
-    def _func_name(self, fn: ast.expr) -> str:
-        if isinstance(fn, ast.Name):
-            return fn.id
-        if isinstance(fn, ast.Attribute):
-            return fn.attr
-        return ""
-
-    def _qualified(self, fn: ast.expr) -> str:
-        """'mod.attr' when the receiver is an imported module alias."""
-        if isinstance(fn, ast.Attribute) and isinstance(fn.value, ast.Name):
-            mod = self.module_aliases.get(fn.value.id)
-            if mod is not None:
-                return f"{mod}.{fn.attr}"
-            # datetime.datetime.now / datetime.date.today via from-import
-            src = self.from_imports.get(fn.value.id)
-            if src is not None:
-                return f"{src.rsplit('.', 1)[-1]}.{fn.attr}"
-        if isinstance(fn, ast.Name) and fn.id in self.from_imports:
-            return self.from_imports[fn.id]
-        return ""
-
     def visit_Call(self, node: ast.Call) -> None:
-        name = self._func_name(node.func)
-        qual = self._qualified(node.func)
+        name = self.func_name(node.func)
+        qual = self.qualified(node.func)
 
         # SL001/SL003: ordered consumers fed a set
         if name in ORDERED_CONSUMERS or name in FLOAT_REDUCERS:
@@ -436,6 +333,4 @@ class _Linter(ast.NodeVisitor):
 def lint_source(source: str, path: str) -> list[Finding]:
     """Run the simlint rules over one file's source text."""
     tree = ast.parse(source, filename=path)
-    linter = _Linter(path, source)
-    linter.visit(tree)
-    return sorted(linter.findings, key=lambda f: (f.line, f.rule))
+    return _Linter(path, source).run(tree)

@@ -5,6 +5,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+from .quantities import GB
 from .simulator import GridSimulator, SimResult
 from .workload import GridConfig, build_catalog, build_topology, generate_jobs
 
@@ -124,11 +125,11 @@ def run_experiment(
     return ExperimentResult(
         scheduler=scheduler, strategy=strategy, n_jobs=len(jobs),
         avg_job_time=res.avg_job_time, avg_inter_comms=res.avg_inter_comms,
-        total_wan_gb=res.total_wan_bytes / 1e9, total_lan_gb=res.total_lan_bytes / 1e9,
+        total_wan_gb=res.total_wan_bytes / GB, total_lan_gb=res.total_lan_bytes / GB,
         makespan=res.makespan,
         completed_jobs=len(res.records),
         net_stats=res.net_stats,
         prefetches=res.prefetches,
-        prefetch_gb=res.prefetch_bytes / 1e9,
+        prefetch_gb=res.prefetch_bytes / GB,
         telemetry=res.telemetry,
     )

@@ -137,15 +137,16 @@ class StorageState:
         if lfn in self._contents[site]:
             # Re-add of a file already on the SE (two store transfers can
             # race for the same key when a temp fetch pops the in-flight
-            # entry): behave like the dict overwrite always did — refresh
-            # the clock, keep the original insertion rank, re-count the
-            # reservation.
+            # entry): refresh the clock, keep the original insertion rank.
+            # The duplicate's reservation was already released by the
+            # caller, so counting the size again would leak used_storage —
+            # one byte ledger entry per resident replica (I3/I4).
             self.touch(site, lfn, now)
         else:
             self._contents[site][lfn] = now
             self._lru_insert(site, lfn, now)
             self._notify("on_storage_add", site, lfn, now, self._seq)
-        st.used_storage += size
+            st.used_storage += size
         self.catalog.add_replica(lfn, site)
 
     def bootstrap(self, site: int, lfn: str, now: float = 0.0) -> None:

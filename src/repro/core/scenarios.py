@@ -24,6 +24,7 @@ import random as _random
 
 from ..obs import OBS_MODES
 from .economy import ECON_BACKENDS
+from .quantities import GB, MB, MBPS_TO_BYTES_PER_S
 from .replica import STRATEGIES, STRATEGY_MODES
 from .scheduler import SCHEDULERS
 from .simulator import NETS
@@ -219,19 +220,19 @@ def to_grid_config(spec: ScenarioSpec, seed: int | None = None) -> GridConfig:
     sites_per_region`` form, so the default spec lowers to exactly
     ``GridConfig()`` (the golden-metrics baseline path).
     """
-    mbps = 1e6 / 8
+    mbps = MBPS_TO_BYTES_PER_S
     two_level = len(spec.tier_fanouts) == 2
     return GridConfig(
         n_regions=spec.tier_fanouts[0] if two_level else 4,
         sites_per_region=spec.tier_fanouts[1] if two_level else 13,
-        storage_capacity=spec.storage_gb * 1e9,
+        storage_capacity=spec.storage_gb * GB,
         lan_bandwidth=spec.lan_mbps * mbps,
         wan_bandwidth=spec.uplink_mbps[0] * mbps,
         n_jobs=spec.n_jobs,
         n_job_types=spec.n_job_types,
         files_per_job=spec.files_per_job,
-        file_size=spec.file_size_mb * 1e6,
-        total_file_bytes=spec.catalog_gb * 1e9,
+        file_size=spec.file_size_mb * MB,
+        total_file_bytes=spec.catalog_gb * GB,
         job_length=spec.job_length,
         interarrival=spec.interarrival_s,
         zipf_alpha=spec.zipf_alpha,

@@ -22,12 +22,9 @@ import dataclasses
 import random as _random
 
 from .catalog import ReplicaCatalog
+from .quantities import GB, MB, MBPS_TO_BYTES_PER_S
 from .scheduler import Job
 from .topology import GridTopology
-
-
-GB = 1e9
-MB = 1e6
 
 
 @dataclasses.dataclass
@@ -59,8 +56,8 @@ class GridConfig:
     n_regions: int = 4
     sites_per_region: int = 13
     storage_capacity: float = 10 * GB
-    lan_bandwidth: float = 1000e6 / 8        # 1000 Mbps
-    wan_bandwidth: float = 10e6 / 8          # 10 Mbps
+    lan_bandwidth: float = 1000.0 * MBPS_TO_BYTES_PER_S
+    wan_bandwidth: float = 10.0 * MBPS_TO_BYTES_PER_S
     n_jobs: int = 500
     n_job_types: int = 5
     files_per_job: int = 12

@@ -24,6 +24,12 @@ shape-guard test:
   oracle checks (float64 oracle dtype + x64-interpret bit-identity).
   Only the sim kernels carry these: their refs are pure-numpy oracles
   (not traceable), so dtype discipline is checked by execution.
+* ``arg_units`` / ``out_units`` — per-operand dimension signature in the
+  vocabulary of :mod:`repro.analysis.units` (``bytes``, ``bytes_per_s``,
+  ``sim_seconds``, ``count``, ``score``; model-kernel tensors are
+  dimensionless ``score``). The jaxpr auditor asserts every spec
+  declares a complete, valid signature and records it in
+  ``results/ANALYSIS_kernels.json``.
 
 This module is imported by every kernel ``__init__`` and therefore MUST
 stay jax-free (the DES engine imports kernel packages on hosts without
@@ -64,6 +70,8 @@ class KernelSpec:
         (sim kernels only; ``None`` for model kernels whose identity
         contract lives in tests/test_kernels.py tolerances).
       multi_output: kernel returns a tuple rather than one array.
+      arg_units: dimension per positional argument of ``make_inputs``.
+      out_units: dimension per output (one entry when single-output).
     """
 
     name: str
@@ -76,6 +84,8 @@ class KernelSpec:
     make_inputs: Callable[[], InputCase]
     make_small_inputs: Callable[[], InputCase] | None = None
     multi_output: bool = False
+    arg_units: tuple[str, ...] = ()
+    out_units: tuple[str, ...] = ()
 
     def load_kernel(self) -> Callable[..., Any]:
         """Import and return the raw kernel entry point (needs jax)."""
@@ -216,6 +226,8 @@ NET_RERATE_SPEC = KernelSpec(
     domain="sim", max_rank=2, budget_bytes=24_000,
     make_inputs=lambda: _net_rerate_inputs(256, 60, 5),
     make_small_inputs=lambda: _net_rerate_inputs(37, 23, 4),
+    arg_units=("count", "bytes", "bytes_per_s", "count", "sim_seconds"),
+    out_units=("bytes_per_s", "sim_seconds"),
 )
 
 EVENT_ENGINE_SPEC = KernelSpec(
@@ -225,6 +237,9 @@ EVENT_ENGINE_SPEC = KernelSpec(
     make_inputs=lambda: _event_engine_inputs(256, 60, 5),
     make_small_inputs=lambda: _event_engine_inputs(37, 23, 4),
     multi_output=True,
+    arg_units=("count", "bytes", "bytes_per_s", "sim_seconds",
+               "bytes_per_s", "count", "sim_seconds"),
+    out_units=("bytes", "bytes_per_s", "sim_seconds", "sim_seconds"),
 )
 
 ST_COST_SPEC = KernelSpec(
@@ -233,6 +248,9 @@ ST_COST_SPEC = KernelSpec(
     domain="sim", max_rank=2, budget_bytes=450_000,
     make_inputs=lambda: _st_cost_inputs(52, 100, 50),
     make_small_inputs=lambda: _st_cost_inputs(8, 24, 5),
+    arg_units=("bytes_per_s", "count", "count", "bytes", "count",
+               "score", "count"),
+    out_units=("sim_seconds",),
 )
 
 STRATEGY_PLAN_SPEC = KernelSpec(
@@ -242,6 +260,9 @@ STRATEGY_PLAN_SPEC = KernelSpec(
     make_inputs=lambda: _strategy_plan_inputs(500, 50),
     make_small_inputs=lambda: _strategy_plan_inputs(24, 7),
     multi_output=True,
+    arg_units=("bytes_per_s", "count", "count", "score", "bytes",
+               "bytes"),
+    out_units=("count", "count", "count", "count", "count"),
 )
 
 VALUE_SCORE_SPEC = KernelSpec(
@@ -250,6 +271,8 @@ VALUE_SCORE_SPEC = KernelSpec(
     domain="sim", max_rank=2, budget_bytes=200_000,
     make_inputs=lambda: _value_score_inputs(52, 100),
     make_small_inputs=lambda: _value_score_inputs(13, 20),
+    arg_units=("score", "bytes", "count", "bytes_per_s"),
+    out_units=("score",),
 )
 
 SELECTIVE_SCAN_SPEC = KernelSpec(
@@ -258,6 +281,9 @@ SELECTIVE_SCAN_SPEC = KernelSpec(
     domain="model", max_rank=3, budget_bytes=2_200_000,
     make_inputs=lambda: _selective_scan_inputs(1, 512, 256, 16),
     multi_output=True,
+    arg_units=("score", "score", "score", "score", "score",
+               "score", "score"),
+    out_units=("score", "score"),
 )
 
 FLASH_ATTENTION_SPEC = KernelSpec(
@@ -265,4 +291,6 @@ FLASH_ATTENTION_SPEC = KernelSpec(
     kernel_attr="flash_attention_kernel", ref_attr="flash_attention_ref",
     domain="model", max_rank=4, budget_bytes=1_700_000,
     make_inputs=lambda: _flash_attention_inputs(1, 2, 2, 256, 1024, 64),
+    arg_units=("score", "score", "score"),
+    out_units=("score",),
 )

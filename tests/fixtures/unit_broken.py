@@ -1,0 +1,43 @@
+"""Deliberately unit-broken engine code — the units checker's test prey.
+
+NOT imported by anything: :mod:`tests.test_units` feeds this file's
+*source* to :func:`repro.analysis.units.lint_units` and asserts every
+seeded violation is flagged (at least three distinct SL02x rules). Each
+bug below is a realistic slip of the grid engine's own vocabulary:
+engine state in bytes / bytes-per-second / sim-seconds, config fields
+in Mbps, probe spans in wall-clock microseconds.
+"""
+
+from __future__ import annotations
+
+
+class BrokenEngine:
+    """A caricature of GridSimulator/NetworkEngine bookkeeping."""
+
+    def __init__(self) -> None:
+        self.now = 0.0
+        self.total_wan_bytes = 0.0
+        self.makespan = 0.0
+
+    def advance(self, size, bandwidth, elapsed_us, link_mbps, n_bytes):
+        # SL020: bytes + sim_seconds
+        backlog = size + self.now
+        # SL021: bytes compared against bytes_per_s
+        if size > bandwidth:
+            backlog = size
+        # SL022: transfer time from bytes / Mbps (8e6/1e6 factor wrong)
+        eta = n_bytes / link_mbps
+        # SL023: sim-clock minus wall-clock probe span
+        lag = self.now - elapsed_us
+        # SL024: raw conversion literal scaling a dimensioned value
+        gigs = n_bytes / 1e9
+        # SL020 (AugAssign): seconds accumulated into a byte counter
+        self.total_wan_bytes += self.now
+        # SL025: makespan (sim_seconds) assigned a byte total
+        self.makespan = n_bytes
+        return backlog, eta, lag, gigs
+
+
+def build_grid(make, spec_mbps):
+    # SL022: Mbps config value bound to a bytes/s keyword unconverted
+    return make(wan_bandwidth=spec_mbps)

@@ -1,0 +1,77 @@
+"""Runtime conservation auditor tests (repro.analysis.conserve).
+
+Ledger closure on the paper baseline and the OptorSim-scale grid, on
+both the numpy and the batched on-device (interpret) network engines,
+plus the economy regime where the prefetch ledger is live. These are
+the dynamic counterparts of the static SL011/SL013 coherence rules:
+the books must balance after a real run, not just mutate through the
+right APIs.
+"""
+
+import json
+
+import pytest
+
+from repro.analysis.conserve import (REL_TOL, _close, conservation_audit,
+                                     run_conservation_smoke)
+
+CORE_INVARIANTS = {"I1_byte_ledger", "I3_site_occupancy",
+                   "I4_aggregate_replicas", "I5_drained",
+                   "I6_prefetch_ledger"}
+
+
+def assert_all_ok(report):
+    bad = {n: c for n, c in report["checks"].items() if not c["ok"]}
+    assert report["ok"] and not bad, bad
+
+
+def test_paper_baseline_ledgers_close_numpy():
+    report = conservation_audit("paper_baseline", n_jobs=40, net="numpy")
+    assert_all_ok(report)
+    assert CORE_INVARIANTS <= set(report["checks"])
+    # failure-free run: the strict counters are checked too
+    assert report["failure_free"]
+    assert "I2_inter_comms" in report["checks"]
+    assert "I7_completion" in report["checks"]
+    # the run moved real bytes — the closure is not vacuous
+    assert report["checks"]["I1_byte_ledger"]["lhs"] > 0
+
+
+def test_paper_baseline_ledgers_close_device_engine():
+    pytest.importorskip("jax")
+    report = conservation_audit("paper_baseline", n_jobs=40,
+                                net="device-interpret")
+    assert_all_ok(report)
+    assert report["checks"]["I1_byte_ledger"]["lhs"] > 0
+
+
+def test_grid_500_smoke_ledgers_close():
+    pytest.importorskip("jax")          # grid_500 dispatches broker="jax"
+    report = conservation_audit("grid_500", n_jobs=40, net="numpy")
+    assert_all_ok(report)
+    assert report["n_jobs"] == 40
+
+
+def test_economy_prefetch_ledger_closes_and_is_live():
+    report = conservation_audit("economy_starved", n_jobs=60, net="numpy")
+    assert_all_ok(report)
+    debits, counted, started = report["checks"]["I6_prefetch_ledger"]["lhs"]
+    proposed = report["checks"]["I6_prefetch_ledger"]["rhs"]
+    assert debits == counted == started > 0      # ledger actually exercised
+    assert started <= proposed
+
+
+def test_smoke_runner_covers_baseline_and_economy():
+    reports = run_conservation_smoke(n_jobs=40)
+    scenarios = [r["scenario"] for r in reports]
+    assert scenarios == ["paper_baseline", "economy_starved"]
+    for report in reports:
+        assert_all_ok(report)
+        json.dumps(report)                       # CI artifact: JSON-ready
+
+
+def test_close_tolerance_is_tight():
+    assert _close(353_500_000_000.0, 353_500_000_000.0)
+    assert not _close(353_500_000_000.0, 353_500_000_001.0 * (1 + 1e-6))
+    assert not _close(1.0, 2.0)
+    assert REL_TOL <= 1e-9
